@@ -1,0 +1,47 @@
+"""Paper Fig. 11: resilience to limited external memory.
+
+The paper's point: Dynasor's working set is ``2·|T| + factors + pointers``
+and *does not grow with R beyond the factors*, while intermediate-heavy
+formats (ALTO's per-thread partial outputs, mode-specific copies) explode.
+We model peak bytes exactly (same accounting as the paper's Table/Fig.11
+setup) at FULL FROSTT scales — no allocation, pure arithmetic — and report
+which (format × memory budget) cells fit.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.tensors import FROSTT_PROFILES
+
+from .common import row
+
+GB = 1024 ** 3
+
+
+def _bytes(profile, rank, fmt, threads: int = 56):
+    shape, nnz = profile["shape"], profile["nnz"]
+    N = len(shape)
+    elem = 4 * N + 4                       # coords + value
+    factors = sum(shape) * rank * 4
+    if fmt == "dynasor":                   # 2|T| double buffer + pointers
+        return 2 * nnz * elem + factors + 8 * (nnz // 1024 + sum(shape) // 1000)
+    if fmt == "alto_like":                 # |T| + per-thread dense partials
+        partials = threads * max(shape) * rank * 4
+        return nnz * elem + factors + partials
+    if fmt == "mode_specific":             # N tensor copies (CSF-ish)
+        return N * nnz * elem + factors
+    raise ValueError(fmt)
+
+
+def run(quick: bool = True):
+    rows = []
+    for name, prof in FROSTT_PROFILES.items():
+        for rank in (16, 64, 256):
+            for fmt in ("dynasor", "alto_like", "mode_specific"):
+                b = _bytes(prof, rank, fmt)
+                rows.append(row(
+                    "memory_fig11", tensor=name, rank=rank, fmt=fmt,
+                    peak_GB=round(b / GB, 2),
+                    fits_16GB=bool(b <= 16 * GB),
+                    fits_128GB=bool(b <= 128 * GB)))
+    return rows

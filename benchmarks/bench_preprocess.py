@@ -1,0 +1,36 @@
+"""Paper Fig. 12: preprocessing (FLYCOO format generation) time.
+
+Stages timed separately, as in §V-J: (1) super-shard generation per mode,
+(2) ordering, (3) shard metadata. Compared against the cost of a plain
+per-mode sort (the mode-specific-format preprocessing floor).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.flycoo import build_flycoo
+
+from .common import BENCH_TENSORS, bench_tensor, row
+
+
+def run(quick: bool = True, scale: float = 0.25):
+    rows = []
+    tensors = BENCH_TENSORS if not quick else BENCH_TENSORS[:4]
+    for name in tensors:
+        t = bench_tensor(name, scale=scale)
+        t0 = time.perf_counter()
+        ft = build_flycoo(t, num_workers=8)
+        t_flycoo = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        for n in range(t.nmodes):
+            np.argsort(t.indices[:, n], kind="stable")
+        t_sorts = time.perf_counter() - t0
+
+        rows.append(row("preprocess_fig12", tensor=name, nnz=t.nnz,
+                        flycoo_s=round(t_flycoo, 4),
+                        per_mode_sort_s=round(t_sorts, 4),
+                        ratio=round(t_flycoo / max(t_sorts, 1e-9), 2)))
+    return rows

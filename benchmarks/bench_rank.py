@@ -1,0 +1,35 @@
+"""Paper Fig. 10: total execution time vs. factor-matrix rank R.
+
+spMTTKRP is memory-bound; traffic ∝ R ⇒ time ≈ linear in R. We measure the
+Dynasor sorted-stream engine across R ∈ {16 … 256} and fit the linearity.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.flycoo import build_flycoo
+
+from .bench_total_time import _dynasor_all_modes
+from .common import bench_tensor, row, timeit
+
+
+def run(quick: bool = True, scale: float = 1.0):
+    rows = []
+    tensors = ("nell-2", "flickr") if quick else (
+        "nell-2", "nell-1", "flickr", "delicious", "vast")
+    ranks = (16, 32, 64, 128, 256)
+    for name in tensors:
+        t = bench_tensor(name, scale=scale)
+        ft = build_flycoo(t, num_workers=8)
+        times = []
+        for rank in ranks:
+            fn = _dynasor_all_modes(ft, rank)
+            tt = timeit(fn, iters=3)
+            times.append(tt)
+            rows.append(row("rank_fig10", tensor=name, rank=rank,
+                            seconds=round(tt, 5)))
+        # linearity: correlation of time vs rank
+        r = float(np.corrcoef(ranks, times)[0, 1])
+        rows.append(row("rank_fig10", tensor=name, rank="linearity_r",
+                        seconds=round(r, 4)))
+    return rows

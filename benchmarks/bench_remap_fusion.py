@@ -1,0 +1,68 @@
+"""Paper Fig. 2: integrated remap+compute vs. separated execution.
+
+The paper found that performing dynamic tensor remapping in the SAME
+thread as the elementwise computation beats dedicating separate threads.
+The JAX analogue: one fused jit computing (MTTKRP, next-mode reorder)
+together — XLA can interleave the sort with the gather/segment-sum streams
+— vs. two sequential jits with a host sync between them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mttkrp import hadamard_rows
+
+from .common import BENCH_TENSORS, bench_tensor, row, timeit
+
+
+def _make(t, rank, seed=0):
+    rng = np.random.default_rng(seed)
+    factors = [jnp.asarray(rng.standard_normal((d, rank)), jnp.float32)
+               for d in t.shape]
+    idx = jnp.asarray(t.indices[np.argsort(t.indices[:, 0], kind="stable")])
+    val = jnp.asarray(t.values)
+
+    @jax.jit
+    def fused(idx, val):
+        ell = hadamard_rows(idx, val, factors, 0)
+        out = jax.ops.segment_sum(ell, idx[:, 0], num_segments=t.shape[0],
+                                  indices_are_sorted=True)
+        order = jnp.argsort(idx[:, 1], stable=True)     # remap for mode 1
+        return out, jnp.take(idx, order, axis=0), jnp.take(val, order)
+
+    @jax.jit
+    def compute_only(idx, val):
+        ell = hadamard_rows(idx, val, factors, 0)
+        return jax.ops.segment_sum(ell, idx[:, 0], num_segments=t.shape[0],
+                                   indices_are_sorted=True)
+
+    @jax.jit
+    def remap_only(idx, val):
+        order = jnp.argsort(idx[:, 1], stable=True)
+        return jnp.take(idx, order, axis=0), jnp.take(val, order)
+
+    def split(idx, val):
+        out = compute_only(idx, val)
+        jax.block_until_ready(out)          # host sync between the passes
+        return out, remap_only(idx, val)
+
+    return fused, split, (idx, val)
+
+
+def run(quick: bool = True, rank: int = 32, scale: float = 1.0):
+    rows = []
+    tensors = BENCH_TENSORS[:3] if quick else BENCH_TENSORS
+    for name in tensors:
+        t = bench_tensor(name, scale=scale)
+        fused, split, args = _make(t, rank)
+        t_fused = timeit(fused, *args)
+        t_split = timeit(split, *args)
+        rows.append(row("remap_fusion_fig2", tensor=name, rank=rank,
+                        fused_s=round(t_fused, 5),
+                        split_s=round(t_split, 5),
+                        speedup=round(t_split / t_fused, 3)))
+    return rows

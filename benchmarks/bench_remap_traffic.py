@@ -1,0 +1,44 @@
+"""Paper Fig. 8: dynamically remapped data volume vs. total elementwise
+traffic — counted EXACTLY (the paper instruments its code with counters;
+we count the same quantities from shapes).
+
+Per mode n:
+  elementwise traffic = nnz·(N−1)·R·4 B   (input factor-row loads)
+                      + nnz·(coords+value) B (tensor stream)
+                      + I_n·R·4 B          (output rows written once, owner)
+  remap traffic       = nnz·(coords+value) B moved to the next mode's
+                        buckets (the 2·|T| double-buffer write).
+
+Paper's claim: remap < 15 % of elementwise traffic on FROSTT tensors.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.flycoo import build_flycoo
+
+from .common import BENCH_TENSORS, bench_tensor, row
+
+
+def run(quick: bool = True, rank: int = 16, scale: float = 0.25):
+    rows = []
+    for name in BENCH_TENSORS:
+        t = bench_tensor(name, scale=scale)
+        N = t.nmodes
+        elem_bytes_per_nnz = 4 * N + 4          # coords + value
+        total_elem = 0
+        total_remap = 0
+        for n in range(N):
+            elem = (t.nnz * (N - 1) * rank * 4
+                    + t.nnz * elem_bytes_per_nnz
+                    + t.shape[n] * rank * 4)
+            remap = t.nnz * elem_bytes_per_nnz
+            total_elem += elem
+            total_remap += remap
+        frac = total_remap / total_elem
+        rows.append(row("remap_traffic_fig8", tensor=name, rank=rank,
+                        elementwise_GB=round(total_elem / 1e9, 4),
+                        remap_GB=round(total_remap / 1e9, 4),
+                        remap_fraction=round(frac, 4),
+                        paper_claim_under_15pct=bool(frac < 0.15)))
+    return rows

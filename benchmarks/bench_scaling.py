@@ -1,0 +1,33 @@
+"""Paper Fig. 7: scalability with worker count (R = 16).
+
+Reported metric: modeled parallel efficiency = mean-load / max-load under
+the LPT schedule as workers grow 1 → 64 (the paper's measured 8.5–21×
+speedup at 56 threads is bounded by exactly this quantity times the
+memory-bandwidth ceiling; wall-clock parallelism is not observable on one
+core)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.flycoo import build_flycoo
+from repro.core.schedule import load_imbalance, lpt_schedule
+
+from .common import BENCH_TENSORS, bench_tensor, row
+
+
+def run(quick: bool = True, scale: float = 0.25):
+    rows = []
+    tensors = BENCH_TENSORS[:3] if quick else BENCH_TENSORS
+    for name in tensors:
+        t = bench_tensor(name, scale=scale)
+        for workers in (1, 2, 4, 8, 16, 32, 56, 64):
+            ft = build_flycoo(t, num_workers=workers)
+            worst = max(
+                load_imbalance(mp.shard_counts,
+                               lpt_schedule(mp.shard_counts, workers),
+                               workers)
+                for mp in ft.modes)
+            rows.append(row("scaling_fig7", tensor=name, workers=workers,
+                            worst_mode_imbalance=round(worst, 4),
+                            modeled_speedup=round(workers / worst, 2)))
+    return rows

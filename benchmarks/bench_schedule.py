@@ -1,0 +1,36 @@
+"""Paper Fig. 6: LPT super-shard scheduling vs. block-cyclic.
+
+On a 1-core container parallel wall-clock is not observable, so we report
+the *load-imbalance factor* (max thread load / mean load) — the exact
+quantity the paper's speedup bound (Graham 4/3) is about: modeled parallel
+time = imbalance × ideal time.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.flycoo import build_flycoo
+from repro.core.schedule import (block_cyclic_schedule, load_imbalance,
+                                 lpt_schedule)
+
+from .common import BENCH_TENSORS, bench_tensor, row
+
+
+def run(quick: bool = True, workers: int = 56, scale: float = 0.25):
+    rows = []
+    tensors = BENCH_TENSORS if not quick else BENCH_TENSORS[:4]
+    for name in tensors:
+        t = bench_tensor(name, scale=scale)
+        ft = build_flycoo(t, num_workers=workers)
+        for n, mp in enumerate(ft.modes):
+            sizes = mp.shard_counts
+            lpt = load_imbalance(sizes, lpt_schedule(sizes, workers),
+                                 workers)
+            cyc = load_imbalance(
+                sizes, block_cyclic_schedule(len(sizes), workers), workers)
+            rows.append(row("schedule_fig6", tensor=name, mode=n,
+                            workers=workers,
+                            lpt_imbalance=round(lpt, 4),
+                            cyclic_imbalance=round(cyc, 4),
+                            modeled_speedup=round(cyc / lpt, 3)))
+    return rows

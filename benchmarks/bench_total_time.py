@@ -1,0 +1,155 @@
+"""Paper Fig. 3/4 + Table III: total spMTTKRP time across all modes —
+Dynasor layout vs. the baseline strategies the paper compares against.
+
+Variants (single-device kernels; the distributed collective-traffic
+comparison is in bench_remap_traffic + the dry-run):
+
+* ``dynasor``     — FLYCOO owner-sorted stream → sorted segment-sum per
+                    mode, tensor already in output-mode order (the dynamic
+                    remap is amortized into the previous mode; its cost is
+                    measured separately in Fig. 8/bench_remap_traffic).
+* ``coo_scatter`` — plain COO scatter-add (`.at[].add`) — the "no layout"
+                    baseline with random output-row writes.
+* ``resort``      — re-sorts the whole tensor for every mode before a
+                    sorted segment-sum — what a mode-agnostic format pays
+                    without dynamic remapping (ALTO-style linearization
+                    cost stand-in).
+* ``stef_like``   — caches the per-nonzero partial Hadamard product from
+                    the previous mode and reuses it (STeF's intermediate
+                    saving), at (nnz × R) extra memory.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flycoo import build_flycoo, pack_mode
+from repro.core.mttkrp import hadamard_rows, mttkrp, mttkrp_sorted
+
+from .common import BENCH_TENSORS, bench_tensor, row, timeit
+
+
+def _dynasor_all_modes(ft, rank, seed=0):
+    t = ft.tensor
+    rng = np.random.default_rng(seed)
+    factors = [jnp.asarray(rng.standard_normal((d, rank)), jnp.float32)
+               for d in t.shape]
+    packs = []
+    for n in range(t.nmodes):
+        order = np.argsort(t.indices[:, n], kind="stable")
+        packs.append((jnp.asarray(t.indices[order]),
+                      jnp.asarray(t.values[order])))
+
+    @jax.jit
+    def run():
+        outs = []
+        for n in range(t.nmodes):
+            idx, val = packs[n]
+            ell = hadamard_rows(idx, val, factors, n)
+            outs.append(jax.ops.segment_sum(
+                ell, idx[:, n], num_segments=t.shape[n],
+                indices_are_sorted=True))
+        return outs
+
+    return run
+
+
+def _coo_scatter_all_modes(t, rank, seed=0):
+    rng = np.random.default_rng(seed)
+    factors = [jnp.asarray(rng.standard_normal((d, rank)), jnp.float32)
+               for d in t.shape]
+    idx = jnp.asarray(t.indices)
+    val = jnp.asarray(t.values)
+
+    @jax.jit
+    def run():
+        outs = []
+        for n in range(t.nmodes):
+            ell = hadamard_rows(idx, val, factors, n)
+            out = jnp.zeros((t.shape[n], rank), jnp.float32)
+            outs.append(out.at[idx[:, n]].add(ell))
+        return outs
+
+    return run
+
+
+def _resort_all_modes(t, rank, seed=0):
+    rng = np.random.default_rng(seed)
+    factors = [jnp.asarray(rng.standard_normal((d, rank)), jnp.float32)
+               for d in t.shape]
+    idx0 = jnp.asarray(t.indices)
+    val0 = jnp.asarray(t.values)
+
+    @jax.jit
+    def run():
+        outs = []
+        for n in range(t.nmodes):
+            order = jnp.argsort(idx0[:, n], stable=True)   # paid EVERY mode
+            idx = jnp.take(idx0, order, axis=0)
+            val = jnp.take(val0, order)
+            ell = hadamard_rows(idx, val, factors, n)
+            outs.append(jax.ops.segment_sum(
+                ell, idx[:, n], num_segments=t.shape[n],
+                indices_are_sorted=True))
+        return outs
+
+    return run
+
+
+def _stef_like_all_modes(t, rank, seed=0):
+    """3-mode only: mode 0 computes val·C[k]; mode 1 reuses it."""
+    if t.nmodes != 3:
+        return None
+    rng = np.random.default_rng(seed)
+    factors = [jnp.asarray(rng.standard_normal((d, rank)), jnp.float32)
+               for d in t.shape]
+    idx = jnp.asarray(t.indices)
+    val = jnp.asarray(t.values)
+
+    @jax.jit
+    def run():
+        # mode 0: partial = val · C[k]; out0 = seg_i(partial ∘ B[j])
+        partial = val[:, None] * jnp.take(factors[2], idx[:, 2], axis=0)
+        out0 = jax.ops.segment_sum(
+            partial * jnp.take(factors[1], idx[:, 1], axis=0), idx[:, 0],
+            num_segments=t.shape[0])
+        # mode 1 REUSES partial (STeF's saved intermediate)
+        out1 = jax.ops.segment_sum(
+            partial * jnp.take(factors[0], idx[:, 0], axis=0), idx[:, 1],
+            num_segments=t.shape[1])
+        # mode 2: no reusable partial → recompute
+        ell = (val[:, None] * jnp.take(factors[0], idx[:, 0], axis=0)
+               * jnp.take(factors[1], idx[:, 1], axis=0))
+        out2 = jax.ops.segment_sum(ell, idx[:, 2], num_segments=t.shape[2])
+        return out0, out1, out2
+
+    return run
+
+
+def run(quick: bool = True, ranks=(16, 64), scale: float = 1.0):
+    rows = []
+    tensors = BENCH_TENSORS[:3] if quick else BENCH_TENSORS
+    for name in tensors:
+        t = bench_tensor(name, scale=scale)
+        ft = build_flycoo(t, num_workers=8)
+        for rank in ranks:
+            variants = {
+                "dynasor": _dynasor_all_modes(ft, rank),
+                "coo_scatter": _coo_scatter_all_modes(t, rank),
+                "resort": _resort_all_modes(t, rank),
+            }
+            st = _stef_like_all_modes(t, rank)
+            if st is not None:
+                variants["stef_like"] = st
+            times = {}
+            for vname, fn in variants.items():
+                times[vname] = timeit(fn, iters=3 if quick else 5)
+            base = times["dynasor"]
+            for vname, tt in times.items():
+                rows.append(row("total_time_fig3", tensor=name, rank=rank,
+                                variant=vname, seconds=round(tt, 5),
+                                speedup_vs_dynasor=round(tt / base, 3)))
+    return rows

@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: timing, CSV rows, standard tensors.
+
+Benchmarks measure on the REAL host CPU — legitimate here because the
+paper's target is a CPU (the TPU mapping is validated by the dry-run +
+roofline instead). On this 1-core container, *parallel wall-clock speedup*
+is not measurable, so distribution-sensitive figures (6, 7) report counted
+work-balance metrics (max/mean load = the paper's speedup bound) alongside
+wall time, and figure 8 counts exact traffic bytes.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.core.tensors import frostt_like
+
+BENCH_TENSORS = ("nell-2", "nell-1", "flickr", "delicious", "vast")
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds; blocks on jax outputs."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def bench_tensor(name: str, scale: float = 0.25, seed: int = 0):
+    return frostt_like(name, seed=seed, scale=scale)
+
+
+def row(bench: str, **kv) -> dict:
+    return dict(bench=bench, **kv)
+
+
+def print_rows(rows: list[dict]) -> None:
+    for r in rows:
+        items = ",".join(f"{k}={v}" for k, v in r.items())
+        print(items, flush=True)

@@ -1,0 +1,63 @@
+"""Benchmark driver: one module per paper figure/table.
+
+  PYTHONPATH=src python -m benchmarks.run             # quick suite
+  PYTHONPATH=src python -m benchmarks.run --full
+  PYTHONPATH=src python -m benchmarks.run --only total_time,schedule
+
+Rows print as `k=v` CSV lines and are saved to experiments/bench/*.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from . import (bench_collective_traffic, bench_memory, bench_preprocess,
+               bench_rank, bench_remap_fusion, bench_remap_traffic,
+               bench_scaling, bench_schedule, bench_total_time, roofline)
+from .common import print_rows
+
+SUITES = {
+    "remap_fusion": bench_remap_fusion.run,      # Fig. 2
+    "total_time": bench_total_time.run,          # Fig. 3/4 + Table III
+    "schedule": bench_schedule.run,              # Fig. 6
+    "scaling": bench_scaling.run,                # Fig. 7
+    "remap_traffic": bench_remap_traffic.run,    # Fig. 8
+    "roofline": roofline.run,                    # Fig. 9 + §Roofline
+    "rank": bench_rank.run,                      # Fig. 10
+    "memory": bench_memory.run,                  # Fig. 11
+    "preprocess": bench_preprocess.run,          # Fig. 12
+    "collective_traffic": bench_collective_traffic.run,   # §IV lock-free claim
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args()
+
+    names = list(SUITES) if not args.only else args.only.split(",")
+    os.makedirs(args.out, exist_ok=True)
+    all_rows = []
+    for name in names:
+        fn = SUITES[name]
+        t0 = time.perf_counter()
+        try:
+            rows = fn(quick=not args.full)
+        except Exception as e:                    # noqa: BLE001
+            rows = [dict(bench=name, status="error", error=repr(e)[:200])]
+        dt = time.perf_counter() - t0
+        print(f"## {name} ({dt:.1f}s)", flush=True)
+        print_rows(rows)
+        all_rows.extend(rows)
+        with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+    print(f"## done: {len(all_rows)} rows -> {args.out}/", flush=True)
+
+
+if __name__ == "__main__":
+    main()

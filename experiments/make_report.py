@@ -1,0 +1,97 @@
+"""Generate the §Dry-run and §Roofline tables for EXPERIMENTS.md from
+experiments/dryrun/*.json.
+
+  PYTHONPATH=src python experiments/make_report.py > experiments/roofline_tables.md
+"""
+import glob
+import json
+import os
+import sys
+
+ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ORDER_ARCHS = [
+    "qwen3-32b", "phi3-mini-3.8b", "internlm2-20b", "minitron-8b",
+    "qwen2-moe-a2.7b", "llama4-scout-17b-a16e", "jamba-1.5-large-398b",
+    "seamless-m4t-large-v2", "llama-3.2-vision-11b", "mamba2-370m",
+]
+
+HINT = {
+    "compute_s": "compute-bound: cut remat recompute / causal-skip attention",
+    "memory_s": "HBM-bound: bf16 caches, fuse gathers, raise AI",
+    "collective_s": "ICI-bound: reshard to cut gathers / overlap",
+}
+
+
+def fmt_ms(x):
+    return f"{x*1e3:.2f}"
+
+
+def load(dirname):
+    cells = {}
+    for p in glob.glob(os.path.join(dirname, "*.json")):
+        stem = os.path.basename(p)[:-5]
+        if len(stem.split("__")) != 3:
+            continue                      # hillclimb variants live alongside
+        with open(p) as f:
+            d = json.load(f)
+        cells[(d["arch"], d["shape"], d["mesh"])] = d
+    return cells
+
+
+def main():
+    cells = load(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")
+
+    print("### §Dry-run — per (arch × shape × mesh): status, fits-HBM, "
+          "compile\n")
+    print("| arch | shape | mesh | status | peak HBM frac | collective "
+          "bytes/dev | compile s |")
+    print("|---|---|---|---|---|---|---|")
+    for a in ORDER_ARCHS:
+        for s in ORDER_SHAPES:
+            for m in ("16x16", "2x16x16"):
+                d = cells.get((a, s, m))
+                if d is None:
+                    print(f"| {a} | {s} | {m} | MISSING | | | |")
+                elif d["status"] == "skipped":
+                    reason = d["reason"].split(":")[0]
+                    print(f"| {a} | {s} | {m} | skipped ({reason}) | | | |")
+                elif d["status"] != "ok":
+                    print(f"| {a} | {s} | {m} | **{d['status']}** | | | |")
+                else:
+                    cb = d["collectives"]["total_bytes"]
+                    print(f"| {a} | {s} | {m} | ok | "
+                          f"{d['peak_hbm_frac']:.2f} | {cb/1e6:.0f} MB | "
+                          f"{d['compile_s']} |")
+
+    print("\n### §Roofline — single-pod (16×16, 256 chips), per cell\n")
+    print("| arch | shape | compute ms | memory ms | collective ms | "
+          "dominant | useful-flops ratio | roofline frac | next lever |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ORDER_ARCHS:
+        for s in ORDER_SHAPES:
+            d = cells.get((a, s, "16x16"))
+            if not d or d.get("status") != "ok":
+                continue
+            r = d["roofline"]
+            # roofline fraction: useful model flops time / bound time
+            t_useful = (d["model_flops_per_chip"]
+                        / 197e12)
+            frac = t_useful / r["bound_s"] if r["bound_s"] else 0
+            print(f"| {a} | {s} | {fmt_ms(r['compute_s'])} | "
+                  f"{fmt_ms(r['memory_s'])} | {fmt_ms(r['collective_s'])} | "
+                  f"{r['dominant'][:-2]} | "
+                  f"{(d.get('useful_flops_ratio') or 0):.2f} | "
+                  f"{frac:.2f} | {HINT[r['dominant']]} |")
+
+    # summary stats
+    ok = [d for d in cells.values() if d["status"] == "ok"]
+    sk = [d for d in cells.values() if d["status"] == "skipped"]
+    err = [d for d in cells.values()
+           if d["status"] not in ("ok", "skipped")]
+    fits = [d for d in ok if d.get("peak_hbm_frac", 9) <= 1.0]
+    print(f"\ncells: ok={len(ok)} skipped={len(sk)} error={len(err)} "
+          f"fit_hbm={len(fits)}/{len(ok)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from .common import ArchConfig, ShapeSpec, SHAPES, applicable, skip_reason
+from .registry import ARCHS, get_config, smoke_config, smoke_shape
+
+__all__ = [
+    "ArchConfig", "ShapeSpec", "SHAPES", "applicable", "skip_reason",
+    "ARCHS", "get_config", "smoke_config", "smoke_shape",
+]

@@ -1,0 +1,14 @@
+"""Dynasor core: the paper's contribution as composable JAX modules.
+
+flycoo      — FLYCOO format build: super-shards, shards, Eq.2/3 params
+schedule    — Alg. 3 LPT greedy scheduling (+ block-cyclic baseline)
+mttkrp      — elementwise/segment-sum spMTTKRP engines (Alg. 2 inner loop)
+remap       — dynamic tensor remapping (§III-B) as bucketed all_to_all
+distributed — shard_map owner-computes spMTTKRP (+ all-reduce baseline)
+cpals       — Alg. 1 CP-ALS driver (single-device and distributed)
+tensors     — sparse tensor containers, FROSTT profiles, .tns I/O
+"""
+from . import cpals, distributed, flycoo, mttkrp, remap, schedule, tensors
+
+__all__ = ["cpals", "distributed", "flycoo", "mttkrp", "remap", "schedule",
+           "tensors"]

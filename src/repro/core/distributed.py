@@ -1,0 +1,321 @@
+"""Distributed spMTTKRP: owner-computes + dynamic remapping via shard_map.
+
+This is Alg. 2 (Dynasor) on a JAX device mesh:
+
+  * the ``workers`` mesh axis plays the CPU-thread role; every device owns
+    the output rows of the super-shards LPT-assigned to it (baked into the
+    FLYCOO row permutation, see ``core.flycoo``);
+  * the per-device mode step is gather → Hadamard → segment-scatter
+    (``ref``/``segsum`` backends) or the Pallas blocked kernel
+    (``pallas``/``pallas_fused``);
+  * **owner-computes means the output factor needs no psum** — only an
+    all_gather to re-replicate it for later modes (on CPU this was "write
+    once to shared DRAM");
+  * while mode ``n`` computes, the tensor is re-bucketed for mode ``n+1``
+    with a capacity-padded all_to_all (``core.remap``) — the dynamic memory
+    layout that keeps storage at ``2·|T|``.
+
+Also implemented, as the paper's comparison targets:
+
+  * :func:`make_spmttkrp_all_modes` with ``remap=False`` — Fig. 9 "Case 2":
+    tensor stays in mode-0 order; non-owner modes must produce dense
+    partial outputs and all-reduce them;
+  * :func:`make_baseline_all_modes` — ALTO/HiCOO-style nonzero-parallel
+    execution: every mode all-reduces a dense ``(I_n, R)`` partial — the
+    intermediate-value traffic Dynasor eliminates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from . import remap as remap_lib
+from .flycoo import FlycooTensor, pack_mode
+from ..kernels.mttkrp import ops as kops
+
+__all__ = [
+    "AXIS",
+    "DynasorRuntime",
+    "prepare_runtime",
+    "init_factors",
+    "make_spmttkrp_all_modes",
+    "make_baseline_all_modes",
+    "unpermute_factor",
+]
+
+AXIS = "workers"
+
+
+@dataclasses.dataclass(frozen=True)
+class DynasorRuntime:
+    """Static metadata threaded through the jitted distributed functions."""
+
+    num_workers: int
+    nmodes: int
+    rank: int
+    rows_cap: tuple[int, ...]   # owned output rows per worker, per mode
+    i_pad: tuple[int, ...]      # num_workers * rows_cap, per mode
+    nnz_cap: int                # per-worker nonzero capacity
+    bucket_cap: int             # all_to_all per-(src,dst) capacity
+    shape: tuple[int, ...]      # natural tensor shape
+    blk: int = 512              # Pallas nonzero block (FLYCOO shard g)
+    tile_rows: int = 128        # Pallas output row tile
+
+    @property
+    def payload_width(self) -> int:
+        return self.nmodes + 1  # coords + value
+
+
+def prepare_runtime(
+    ft: FlycooTensor, rank: int, *, blk: int | None = None,
+    tile_rows: int = 8,
+) -> tuple[DynasorRuntime, tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """Build runtime metadata + the initial mode-0 packed layout (H_0)."""
+    D = ft.params.num_workers
+    tile = tile_rows
+    rows_cap = tuple(
+        int(-(-mp.rows_cap // tile) * tile) for mp in ft.modes  # round to tile
+    )
+    i_pad = tuple(D * rc for rc in rows_cap)
+    blk = int(blk if blk is not None else min(ft.params.g, 512))
+    rt = DynasorRuntime(
+        num_workers=D, nmodes=ft.nmodes, rank=rank, rows_cap=rows_cap,
+        i_pad=i_pad, nnz_cap=ft.nnz_cap,
+        bucket_cap=remap_lib.remap_capacity(ft), shape=ft.tensor.shape,
+        blk=blk, tile_rows=tile,
+    )
+    # pack_mode used flycoo rows_cap; re-pad indices to tile-rounded layout.
+    idx, val, mask = pack_mode(ft, 0)
+    idx = _repad_indices(ft, idx, rows_cap)
+    return rt, (idx, val, mask)
+
+
+def _repad_indices(ft: FlycooTensor, idx: np.ndarray,
+                   rows_cap: Sequence[int]) -> np.ndarray:
+    """Map device-major slots from flycoo rows_cap to tile-rounded rows_cap."""
+    out = idx.copy()
+    for n, mp in enumerate(ft.modes):
+        old, new = mp.rows_cap, rows_cap[n]
+        if old == new:
+            continue
+        dev = idx[..., n] // old
+        out[..., n] = dev * new + idx[..., n] % old
+    return out
+
+
+def permuted_factor_init(ft: FlycooTensor, mode: int, rank: int,
+                         rows_cap: int, seed: int) -> np.ndarray:
+    """Random factor in permuted row space; padding rows exactly zero."""
+    rng = np.random.default_rng(seed * 1000 + mode)
+    D = ft.params.num_workers
+    nat = rng.standard_normal((ft.tensor.shape[mode], rank)).astype(np.float32)
+    out = np.zeros((D * rows_cap, rank), np.float32)
+    mp = ft.modes[mode]
+    # natural row r lives at permuted slot row_perm[r] (re-padded to rows_cap)
+    slot = (mp.row_perm // mp.rows_cap) * rows_cap + mp.row_perm % mp.rows_cap
+    out[slot] = nat
+    return out
+
+
+def init_factors(ft: FlycooTensor, rt: DynasorRuntime, seed: int = 0):
+    return [
+        permuted_factor_init(ft, n, rt.rank, rt.rows_cap[n], seed)
+        for n in range(rt.nmodes)
+    ]
+
+
+def unpermute_factor(ft: FlycooTensor, rt: DynasorRuntime, mode: int,
+                     factor: np.ndarray) -> np.ndarray:
+    """Permuted (i_pad, R) → natural (I_n, R)."""
+    mp = ft.modes[mode]
+    slot = (mp.row_perm // mp.rows_cap) * rt.rows_cap[mode] \
+        + mp.row_perm % mp.rows_cap
+    return np.asarray(factor)[slot]
+
+
+# ---------------------------------------------------------------------------
+# shard_map-inner primitives
+# ---------------------------------------------------------------------------
+
+def _pack_payload(idx, val):
+    bits = jax.lax.bitcast_convert_type(idx.astype(jnp.int32), jnp.float32)
+    return jnp.concatenate([bits, val[:, None].astype(jnp.float32)], axis=1)
+
+
+def _unpack_payload(payload, nmodes):
+    idx = jax.lax.bitcast_convert_type(payload[:, :nmodes], jnp.int32)
+    return idx, payload[:, nmodes]
+
+
+def device_mttkrp(idx, val, mask, factors, mode: int, rt: DynasorRuntime,
+                  backend: str):
+    """Owner-computes local MTTKRP for ``mode`` → (rows_cap, R) f32."""
+    dev = jax.lax.axis_index(AXIS)
+    rows_cap = rt.rows_cap[mode]
+    if backend in ("pallas", "pallas_fused", "ref"):
+        return kops.mttkrp_device_step(
+            idx, val, mask, factors, mode=mode, rows_cap=rows_cap,
+            row_offset=dev * rows_cap, blk=rt.blk, tile_rows=rt.tile_rows,
+            interpret=True, backend=backend,
+        )
+    # segsum: plain XLA segment-sum path (dry-run / TPU-lowerable default).
+    local_row = jnp.where(mask, idx[:, mode] - dev * rows_cap, 0)
+    ell = jnp.where(mask, val, 0.0)[:, None].astype(factors[0].dtype)
+    for w in range(rt.nmodes):
+        if w != mode:
+            ell = ell * jnp.take(factors[w], idx[:, w], axis=0)
+    return jax.ops.segment_sum(
+        ell.astype(jnp.float32), local_row, num_segments=rows_cap,
+        indices_are_sorted=True,
+    )
+
+
+def device_remap(idx, val, mask, next_mode: int, rt: DynasorRuntime):
+    """Dynamic tensor remapping: re-bucket owned nonzeros for ``next_mode``.
+
+    Returns ``(idx', val', mask', dropped)`` — the new owner-sorted layout.
+    """
+    D = rt.num_workers
+    dest = jnp.where(
+        mask, (idx[:, next_mode] // rt.rows_cap[next_mode]).astype(jnp.int32), D
+    )
+    payload = _pack_payload(idx, val)
+    buckets, bmask, dropped = remap_lib.bucket_by_destination(
+        dest, payload, D, rt.bucket_cap
+    )
+    recv, recv_mask = remap_lib.exchange(buckets, bmask, AXIS)
+    flat = recv.reshape(D * rt.bucket_cap, rt.payload_width)
+    fmask = recv_mask.reshape(D * rt.bucket_cap)
+    ridx, _ = _unpack_payload(flat, rt.nmodes)
+    key = ridx[:, next_mode]  # permuted slot == sort by local row
+    out, omask = remap_lib.compact_sorted(flat, fmask, key, rt.nnz_cap)
+    oidx, oval = _unpack_payload(out, rt.nmodes)
+    oval = jnp.where(omask, oval, 0.0)
+    # Padding entries point at row 0 (in-bounds gather, zero value: harmless).
+    oidx = jnp.where(omask[:, None], oidx, 0)
+    return oidx, oval, omask, dropped
+
+
+def _dense_partial_mttkrp(idx, val, mask, factors, mode: int,
+                          rt: DynasorRuntime):
+    """Non-owner path: dense (i_pad, R) partial + all-reduce (baseline)."""
+    ell = jnp.where(mask, val, 0.0)[:, None].astype(factors[0].dtype)
+    for w in range(rt.nmodes):
+        if w != mode:
+            ell = ell * jnp.take(factors[w], idx[:, w], axis=0)
+    partial = jax.ops.segment_sum(
+        ell.astype(jnp.float32), jnp.where(mask, idx[:, mode], 0),
+        num_segments=rt.i_pad[mode],
+    )
+    return jax.lax.psum(partial, AXIS)
+
+
+# ---------------------------------------------------------------------------
+# Top-level jitted builders
+# ---------------------------------------------------------------------------
+
+def make_spmttkrp_all_modes(
+    rt: DynasorRuntime, mesh: Mesh, *, backend: str = "segsum",
+    remap: bool = True,
+) -> Callable:
+    """spMTTKRP along all modes (the paper's headline benchmark op).
+
+    Returns a jitted fn ``(idx, val, mask, factors) ->
+    (mttkrp_outs, (idx', val', mask'), diagnostics)`` where ``mttkrp_outs``
+    is a list of replicated ``(i_pad_n, R)`` MTTKRP results (pre-solve) and
+    the primed tensors are the remapped layout (back at mode 0 after a full
+    cycle).
+
+    ``remap=False`` is Fig. 9 "Case 2": the layout stays in mode-0 order; for
+    modes ≥ 1 each device computes a dense partial over *all* rows and
+    all-reduces it (the intermediate-value traffic Dynasor avoids).
+    """
+
+    def inner(idx, val, mask, *factors):
+        # shard_map blocks keep a leading (1, ...) device axis — drop it.
+        idx, val, mask = idx[0], val[0], mask[0]
+        factors = list(factors)
+        outs = []
+        diags = {"dropped": jnp.zeros((), jnp.int32)}
+        for n in range(rt.nmodes):
+            owner_ok = remap or n == 0
+            if owner_ok:
+                local = device_mttkrp(idx, val, mask, factors, n, rt, backend)
+                full = jax.lax.all_gather(local, AXIS, axis=0, tiled=True)
+            else:
+                full = _dense_partial_mttkrp(idx, val, mask, factors, n, rt)
+            outs.append(full)
+            if remap:
+                nxt = (n + 1) % rt.nmodes
+                idx, val, mask, dropped = device_remap(idx, val, mask, nxt, rt)
+                diags["dropped"] = diags["dropped"] + dropped.astype(jnp.int32)
+        return outs, (idx[None], val[None], mask[None]), diags
+
+    spec_t = P(AXIS)
+    spec_r = P()
+    shmapped = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(spec_t, spec_t, spec_t) + (spec_r,) * rt.nmodes,
+        out_specs=([spec_r] * rt.nmodes, (spec_t, spec_t, spec_t),
+                   {"dropped": spec_r}),
+        check_vma=False,
+    )
+    return jax.jit(shmapped)
+
+
+def make_baseline_all_modes(rt: DynasorRuntime, mesh: Mesh) -> Callable:
+    """ALTO/HiCOO-style nonzero-parallel baseline.
+
+    Tensor split evenly by nonzero count (no ownership structure); every
+    mode produces a dense ``(i_pad_n, R)`` partial per device and all-reduces
+    it. Same outputs as Dynasor; different (much larger) collective traffic.
+    """
+
+    def inner(idx, val, mask, *factors):
+        idx, val, mask = idx[0], val[0], mask[0]
+        factors = list(factors)
+        outs = [
+            _dense_partial_mttkrp(idx, val, mask, factors, n, rt)
+            for n in range(rt.nmodes)
+        ]
+        return outs
+
+    spec_t = P(AXIS)
+    spec_r = P()
+    shmapped = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(spec_t, spec_t, spec_t) + (spec_r,) * rt.nmodes,
+        out_specs=[spec_r] * rt.nmodes,
+        check_vma=False,
+    )
+    return jax.jit(shmapped)
+
+
+def even_split_pack(ft: FlycooTensor, rt: DynasorRuntime):
+    """Nonzero-parallel layout for the baseline: even chunks, natural order.
+
+    Indices are still in permuted row space so baseline outputs are directly
+    comparable with Dynasor outputs.
+    """
+    D = rt.num_workers
+    nnz = ft.nnz
+    cap = -(-nnz // D)
+    idx = np.zeros((D, cap, ft.nmodes), np.int32)
+    val = np.zeros((D, cap), np.float32)
+    mask = np.zeros((D, cap), bool)
+    perm_idx = _repad_indices(ft, ft.perm_indices.astype(np.int32), rt.rows_cap)
+    for d in range(D):
+        lo, hi = d * cap, min(nnz, (d + 1) * cap)
+        k = hi - lo
+        if k <= 0:
+            continue
+        idx[d, :k] = perm_idx[lo:hi]
+        val[d, :k] = ft.tensor.values[lo:hi]
+        mask[d, :k] = True
+    return idx, val, mask

@@ -1,0 +1,183 @@
+"""Sparse tensor containers, synthetic generators and .tns I/O.
+
+The paper evaluates on FROSTT tensors (Nell-1/2, Flickr, Delicious, Vast).
+Those are multi-GB downloads, so the benchmark suite uses *FROSTT-scaled
+synthetic* tensors: same mode counts, same qualitative index distributions
+(power-law "hub" indices, as in web/NLP tensors), scaled nnz. Real .tns files
+load through :func:`load_tns` when present.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "SparseTensor",
+    "random_sparse_tensor",
+    "low_rank_sparse_tensor",
+    "frostt_like",
+    "load_tns",
+    "save_tns",
+    "FROSTT_PROFILES",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseTensor:
+    """COO sparse tensor: ``indices[(nnz, N)]``, ``values[(nnz,)]``."""
+
+    indices: np.ndarray  # (nnz, N) int32/int64
+    values: np.ndarray   # (nnz,) float
+    shape: tuple[int, ...]
+
+    def __post_init__(self):
+        assert self.indices.ndim == 2
+        assert self.indices.shape[1] == len(self.shape)
+        assert self.values.shape == (self.indices.shape[0],)
+
+    @property
+    def nnz(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def nmodes(self) -> int:
+        return len(self.shape)
+
+    def to_dense(self) -> np.ndarray:
+        """Densify (tests only — small tensors)."""
+        out = np.zeros(self.shape, dtype=np.float64)
+        np.add.at(out, tuple(self.indices.T), self.values.astype(np.float64))
+        return out
+
+    def norm(self) -> float:
+        return float(np.linalg.norm(self.values))
+
+    def permuted_rows(self, perms: Sequence[np.ndarray]) -> "SparseTensor":
+        """Relabel mode-n indices through ``perms[n]`` (natural -> permuted)."""
+        idx = np.stack(
+            [perms[n][self.indices[:, n]] for n in range(self.nmodes)], axis=1
+        )
+        return SparseTensor(idx.astype(self.indices.dtype), self.values, self.shape)
+
+
+def _dedup(indices: np.ndarray, values: np.ndarray, shape) -> SparseTensor:
+    """Sum duplicate coordinates (canonical COO)."""
+    flat = np.ravel_multi_index(tuple(indices.T), shape)
+    order = np.argsort(flat, kind="stable")
+    flat, indices, values = flat[order], indices[order], values[order]
+    uniq, start = np.unique(flat, return_index=True)
+    summed = np.add.reduceat(values, start)
+    return SparseTensor(indices[start].astype(np.int32), summed.astype(values.dtype), tuple(shape))
+
+
+def random_sparse_tensor(
+    shape: Sequence[int],
+    nnz: int,
+    *,
+    seed: int = 0,
+    distribution: str = "uniform",
+    alpha: float = 1.1,
+    dtype=np.float32,
+) -> SparseTensor:
+    """Random COO tensor.
+
+    ``distribution='powerlaw'`` skews indices toward small ids (hub structure
+    seen in FROSTT web/NLP tensors) — this is what makes super-shard loads
+    *unbalanced* and the LPT schedule matter (paper Fig. 6).
+    """
+    rng = np.random.default_rng(seed)
+    cols = []
+    for dim in shape:
+        if distribution == "powerlaw":
+            # Zipf-like via inverse-CDF on a truncated Pareto.
+            u = rng.random(nnz)
+            raw = (1.0 - u) ** (-1.0 / alpha) - 1.0
+            col = np.minimum((raw * dim / raw.max()).astype(np.int64), dim - 1)
+        else:
+            col = rng.integers(0, dim, size=nnz)
+        cols.append(col)
+    indices = np.stack(cols, axis=1)
+    values = rng.standard_normal(nnz).astype(dtype)
+    values[values == 0] = 1.0
+    return _dedup(indices, values, tuple(shape))
+
+
+def low_rank_sparse_tensor(
+    shape: Sequence[int],
+    rank: int,
+    nnz: int,
+    *,
+    seed: int = 0,
+    noise: float = 0.0,
+    dtype=np.float32,
+) -> tuple[SparseTensor, list[np.ndarray]]:
+    """Sparse sample of a ground-truth rank-``rank`` tensor.
+
+    Returns ``(tensor, true_factors)``; CP-ALS on the samples should recover
+    factors congruent with the truth (test_cpals uses this).
+    """
+    rng = np.random.default_rng(seed)
+    factors = [rng.standard_normal((dim, rank)).astype(np.float64) for dim in shape]
+    idx = np.stack([rng.integers(0, dim, size=nnz) for dim in shape], axis=1)
+    vals = np.ones(nnz, dtype=np.float64)
+    for n, dim in enumerate(shape):
+        pass
+    prod = np.ones((nnz, rank), dtype=np.float64)
+    for n in range(len(shape)):
+        prod *= factors[n][idx[:, n]]
+    vals = prod.sum(axis=1)
+    if noise:
+        vals = vals + noise * rng.standard_normal(nnz)
+    t = _dedup(idx, vals.astype(dtype), tuple(shape))
+    return t, [f.astype(dtype) for f in factors]
+
+
+# FROSTT dataset profiles from paper Table II, scaled for a CPU container.
+FROSTT_PROFILES: dict[str, dict] = {
+    # name: (true shape, true nnz) -> scaled synthetic stand-in
+    "nell-1": dict(shape=(2_900_000, 2_100_000, 25_500_000), nnz=143_600_000,
+                   scaled_shape=(2900, 2100, 25500), scaled_nnz=143_600,
+                   distribution="powerlaw"),
+    "nell-2": dict(shape=(12_100, 9_200, 28_800), nnz=76_900_000,
+                   scaled_shape=(1210, 920, 2880), scaled_nnz=76_900,
+                   distribution="uniform"),
+    "flickr": dict(shape=(319_600, 28_200_000, 1_600_000), nnz=112_900_000,
+                   scaled_shape=(3196, 28200, 1600), scaled_nnz=112_900,
+                   distribution="powerlaw"),
+    "delicious": dict(shape=(532_900, 17_300_000, 2_500_000, 1_400), nnz=140_100_000,
+                      scaled_shape=(5329, 17300, 2500, 140), scaled_nnz=140_100,
+                      distribution="powerlaw"),
+    "vast": dict(shape=(165_400, 11_400, 2, 100, 89), nnz=26_000_000,
+                 scaled_shape=(16540, 1140, 2, 100, 89), scaled_nnz=26_000,
+                 distribution="uniform"),
+}
+
+
+def frostt_like(name: str, *, seed: int = 0, scale: float = 1.0) -> SparseTensor:
+    """Synthetic stand-in for a FROSTT tensor (paper Table II), scaled."""
+    prof = FROSTT_PROFILES[name]
+    shape = tuple(max(2, int(d * scale)) if scale != 1.0 else d
+                  for d in prof["scaled_shape"])
+    nnz = max(16, int(prof["scaled_nnz"] * scale))
+    return random_sparse_tensor(shape, nnz, seed=seed, distribution=prof["distribution"])
+
+
+def load_tns(path: str, *, one_indexed: bool = True) -> SparseTensor:
+    """Load a FROSTT ``.tns`` text file (coords then value per line)."""
+    data = np.loadtxt(path, dtype=np.float64, ndmin=2)
+    idx = data[:, :-1].astype(np.int64)
+    if one_indexed:
+        idx -= 1
+    vals = data[:, -1].astype(np.float32)
+    shape = tuple(int(m) + 1 for m in idx.max(axis=0))
+    return _dedup(idx, vals, shape)
+
+
+def save_tns(t: SparseTensor, path: str, *, one_indexed: bool = True) -> None:
+    off = 1 if one_indexed else 0
+    with open(path, "w") as f:
+        for i in range(t.nnz):
+            coords = " ".join(str(int(c) + off) for c in t.indices[i])
+            f.write(f"{coords} {float(t.values[i]):.9g}\n")

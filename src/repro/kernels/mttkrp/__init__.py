@@ -1,0 +1,2 @@
+"""Pallas TPU kernel for blocked segmented spMTTKRP (FLYCOO shards → VMEM)."""
+from . import kernel, ops, ref  # noqa: F401

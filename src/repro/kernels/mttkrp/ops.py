@@ -1,0 +1,187 @@
+"""jit'd wrappers: FLYCOO shard layout construction + Pallas MTTKRP call.
+
+``build_block_layout`` turns the sorted per-device nonzero stream into the
+block-aligned layout the kernel requires (no block straddles an output row
+tile — the runtime equivalent of FLYCOO's shard/super-shard alignment), then
+``mttkrp_device_step`` runs gather → (fused) Hadamard → blocked scatter.
+
+Everything here is static-shape and jit-safe so it can live inside
+``shard_map`` per device.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+__all__ = [
+    "build_block_layout",
+    "mttkrp_blocked",
+    "mttkrp_device_step",
+    "pad_rank",
+]
+
+
+def pad_rank(x, multiple: int = 128):
+    """Pad the trailing (rank) dim to an MXU-aligned multiple."""
+    r = x.shape[-1]
+    pad = (-r) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths)
+
+
+def n_pad_for(cap: int, rows_cap: int, blk: int, tile_rows: int) -> int:
+    """Static aligned-stream length: every tile wastes < blk slots."""
+    num_tiles = rows_cap // tile_rows
+    return ((cap + blk - 1) // blk) * blk + num_tiles * blk
+
+
+@functools.partial(
+    jax.jit, static_argnames=("rows_cap", "blk", "tile_rows")
+)
+def build_block_layout(local_row, valid, *, rows_cap: int, blk: int,
+                       tile_rows: int):
+    """Compute block-aligned slots for a sorted nonzero stream.
+
+    Args:
+      local_row: ``(cap,)`` int32 output row per element, ascending among
+        valid elements; invalid elements trail.
+      valid: ``(cap,)`` bool.
+      rows_cap: output rows (multiple of ``tile_rows``).
+
+    Returns:
+      ``(slot, tile_of_block)`` — ``slot[(cap,)]`` destination of each
+      element in the aligned stream (``n_pad_for(...)`` = dump slot for
+      invalid), ``tile_of_block[(n_pad//blk,)]`` non-decreasing output tile
+      per block.
+    """
+    cap = local_row.shape[0]
+    num_tiles = rows_cap // tile_rows
+    n_pad = n_pad_for(cap, rows_cap, blk, tile_rows)
+
+    tile_of_elem = jnp.where(valid, local_row // tile_rows, num_tiles)
+    counts = jax.ops.segment_sum(
+        valid.astype(jnp.int32), tile_of_elem, num_segments=num_tiles + 1
+    )[:num_tiles]
+    padded = ((counts + blk - 1) // blk) * blk
+    offsets = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                               jnp.cumsum(padded).astype(jnp.int32)])
+    # Elements are sorted by (valid desc, row asc) => per-tile runs contiguous.
+    first_of_tile = jnp.searchsorted(tile_of_elem, tile_of_elem, side="left")
+    rank_in_tile = jnp.arange(cap, dtype=jnp.int32) - first_of_tile.astype(jnp.int32)
+    slot = jnp.where(
+        valid,
+        jnp.take(offsets, tile_of_elem, fill_value=0) + rank_in_tile,
+        n_pad,
+    )
+    block_start = jnp.arange(n_pad // blk, dtype=jnp.int32) * blk
+    tile_of_block = jnp.clip(
+        jnp.searchsorted(offsets, block_start, side="right") - 1,
+        0, num_tiles - 1,
+    ).astype(jnp.int32)
+    return slot, tile_of_block
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows_cap", "blk", "tile_rows", "interpret", "use_ref"),
+)
+def mttkrp_blocked(contrib, local_row, valid, *, rows_cap: int,
+                   blk: int = 512, tile_rows: int = 128,
+                   interpret: bool = True, use_ref: bool = False):
+    """Scatter stage on a sorted stream via the Pallas kernel.
+
+    ``use_ref=True`` routes to the pure-jnp oracle (A/B testing and the
+    CPU-bench path).
+    """
+    if use_ref:
+        masked = jnp.where(valid[:, None], contrib, 0.0)
+        row = jnp.where(valid, local_row, 0)
+        return _ref.segment_accumulate_ref(masked, row, rows_cap)
+
+    n_pad = n_pad_for(local_row.shape[0], rows_cap, blk, tile_rows)
+    slot, tile_of_block = build_block_layout(
+        local_row, valid, rows_cap=rows_cap, blk=blk, tile_rows=tile_rows
+    )
+    rank = contrib.shape[-1]
+    contrib_pad = pad_rank(contrib)
+    rpad = contrib_pad.shape[-1]
+    aligned = jnp.zeros((n_pad + 1, rpad), contrib_pad.dtype)\
+        .at[slot].set(jnp.where(valid[:, None], contrib_pad, 0.0))[:-1]
+    row_aligned = jnp.zeros((n_pad + 1,), jnp.int32)\
+        .at[slot].set((local_row % tile_rows).astype(jnp.int32))[:-1]
+    out = _kernel.segment_accumulate(
+        aligned, row_aligned, tile_of_block,
+        rows_cap=rows_cap, blk=blk, tile_rows=tile_rows, interpret=interpret,
+    )
+    return out[:, :rank]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "rows_cap", "blk", "tile_rows", "interpret",
+                     "backend"),
+)
+def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
+                       row_offset, blk: int = 512, tile_rows: int = 128,
+                       interpret: bool = True, backend: str = "pallas"):
+    """Full per-device mode step: gather → Hadamard → blocked scatter.
+
+    Args:
+      idx: ``(cap, N)`` permuted coordinates of owned nonzeros, sorted by
+        output row (valid first).
+      val: ``(cap,)`` values (0 on padding).
+      valid: ``(cap,)`` bool.
+      factors: list of ``(I_pad_w, R)`` replicated factor matrices (permuted
+        row space).
+      mode: output mode.
+      rows_cap: owned output rows.
+      row_offset: scalar — first owned permuted row (``device_id*rows_cap``).
+      backend: ``pallas`` | ``pallas_fused`` (3-mode) | ``ref``.
+
+    Returns ``(rows_cap, R)`` float32 local output factor rows.
+    """
+    nmodes = idx.shape[1]
+    local_row = (idx[:, mode] - row_offset).astype(jnp.int32)
+    local_row = jnp.where(valid, local_row, 0)
+
+    in_modes = [w for w in range(nmodes) if w != mode]
+    if backend == "pallas_fused" and len(in_modes) == 2:
+        rows_a = jnp.take(factors[in_modes[0]], idx[:, in_modes[0]], axis=0)
+        rows_b = jnp.take(factors[in_modes[1]], idx[:, in_modes[1]], axis=0)
+        vals = jnp.where(valid, val, 0.0)
+        n_pad = n_pad_for(local_row.shape[0], rows_cap, blk, tile_rows)
+        slot, tile_of_block = build_block_layout(
+            local_row, valid, rows_cap=rows_cap, blk=blk, tile_rows=tile_rows
+        )
+        rank = rows_a.shape[-1]
+        ra = pad_rank(rows_a)
+        rb = pad_rank(rows_b)
+        rpad = ra.shape[-1]
+        ra_al = jnp.zeros((n_pad + 1, rpad), ra.dtype).at[slot].set(ra)[:-1]
+        rb_al = jnp.zeros((n_pad + 1, rpad), rb.dtype).at[slot].set(rb)[:-1]
+        v_al = jnp.zeros((n_pad + 1,), vals.dtype).at[slot].set(vals)[:-1]
+        r_al = jnp.zeros((n_pad + 1,), jnp.int32)\
+            .at[slot].set((local_row % tile_rows).astype(jnp.int32))[:-1]
+        out = _kernel.fused_mttkrp_3mode(
+            v_al, ra_al, rb_al, r_al, tile_of_block,
+            rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
+            interpret=interpret,
+        )
+        return out[:, :rank]
+
+    # Generic N-mode: materialize contrib, then blocked scatter.
+    ell = jnp.where(valid, val, 0.0)[:, None].astype(factors[0].dtype)
+    for w in in_modes:
+        ell = ell * jnp.take(factors[w], idx[:, w], axis=0)
+    use_ref = backend == "ref"
+    return mttkrp_blocked(
+        ell.astype(jnp.float32), local_row, valid, rows_cap=rows_cap,
+        blk=blk, tile_rows=tile_rows, interpret=interpret, use_ref=use_ref,
+    )

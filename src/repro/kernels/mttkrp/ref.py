@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the blocked MTTKRP scatter kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["segment_accumulate_ref", "fused_mttkrp_ref"]
+
+
+def segment_accumulate_ref(contrib, local_row, rows_cap: int):
+    """``out[r] = Σ_{i: local_row[i]==r} contrib[i]`` — the scatter stage.
+
+    Args:
+      contrib: ``(nnz, R)`` per-nonzero contribution (value × Hadamard of
+        input factor rows). Padding rows must be exactly zero.
+      local_row: ``(nnz,)`` int32 output row per nonzero, sorted ascending.
+      rows_cap: number of output rows.
+    """
+    return jax.ops.segment_sum(
+        contrib, local_row, num_segments=rows_cap, indices_are_sorted=True
+    )
+
+
+def fused_mttkrp_ref(vals, rows_list, local_row, rows_cap: int):
+    """Fused Hadamard + scatter oracle (3+ mode).
+
+    ``out[r] += vals[i] * ⊙_w rows_list[w][i]`` — same contract as the fused
+    Pallas kernel: the per-nonzero ``(nnz, R)`` contribution is *never*
+    materialized in HBM.
+    """
+    ell = vals[:, None].astype(rows_list[0].dtype)
+    for rows in rows_list:
+        ell = ell * rows
+    return jax.ops.segment_sum(
+        ell.astype(jnp.float32), local_row, num_segments=rows_cap,
+        indices_are_sorted=True,
+    )

@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count at first
+init, and the production meshes need 512 placeholder devices.
+
+Per cell:
+  * build the step function (train_step for ``train_*``, prefill/serve
+    steps for inference shapes),
+  * ``jax.jit(step, ...).lower(**ShapeDtypeStruct specs)`` — no allocation,
+  * ``.compile()`` — proves the sharding/collective program is coherent,
+  * record ``memory_analysis()`` (fits-in-HBM proof), ``cost_analysis()``
+    (FLOPs/bytes) and parsed collective bytes → EXPERIMENTS.md §Dry-run /
+    §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all          # every runnable cell
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, SHAPES, get_config, skip_reason
+from ..models import steps as steps_lib
+from ..models.params import abstract_params, tree_shardings
+from ..models import model as model_lib
+from .. import optim as optim_lib
+from .flops import step_costs
+from .hlo_analysis import roofline_terms, summarize_cell
+from .mesh import HW, make_production_mesh
+
+__all__ = ["dryrun_cell", "main"]
+
+# Microbatches per train step (activation-memory fit): per-device
+# microbatch is exactly one sequence on either mesh (256/16/16 = 1,
+# 256/8/32 = 1).
+GRAD_ACCUM = {"16x16": 16, "2x16x16": 8}
+
+
+def _train_lowered(cfg, shape, mesh, rules, grad_accum=None):
+    if grad_accum is None:
+        grad_accum = GRAD_ACCUM["2x16x16" if "pod" in mesh.axis_names
+                                else "16x16"]
+    opt = optim_lib.make_optimizer(cfg.optimizer)
+    state = steps_lib.train_state_specs(cfg, opt, mesh, rules)
+    p_sh = jax.tree.map(lambda s: s.sharding, state["params"])
+    step_fn = steps_lib.make_train_step(cfg, opt, mesh, rules,
+                                        grad_accum=grad_accum,
+                                        param_shardings=p_sh)
+    batch = steps_lib.input_specs(cfg, shape, mesh, rules)
+    state_sh = jax.tree.map(lambda s: s.sharding, state)
+    fn = jax.jit(step_fn, donate_argnums=(0,),
+                 out_shardings=(state_sh, None))
+    return fn.lower(state, batch), (step_fn, (state, batch))
+
+
+def _prefill_lowered(cfg, shape, mesh, rules):
+    step_fn = steps_lib.make_prefill_step(cfg, mesh, rules)
+    params = abstract_params(model_lib.model_specs(cfg), mesh, rules)
+    batch = steps_lib.input_specs(cfg, shape, mesh, rules)
+    return jax.jit(step_fn).lower(params, batch), (step_fn, (params, batch))
+
+
+def _decode_lowered(cfg, shape, mesh, rules):
+    step_fn = steps_lib.make_decode_step(cfg, mesh, rules)
+    params = abstract_params(model_lib.model_specs(cfg), mesh, rules)
+    specs = steps_lib.input_specs(cfg, shape, mesh, rules)
+    cache_sh = jax.tree.map(lambda s: s.sharding, specs["cache"])
+    fn = jax.jit(step_fn, donate_argnums=(1,),
+                 out_shardings=(None, cache_sh))
+    args = (params, specs["cache"], specs["token"], specs["pos"])
+    return fn.lower(*args), (step_fn, args)
+
+
+def _parse_overrides(pairs):
+    """['kv_cache_dtype=int8', 'exact_causal_attn=true'] → kwargs."""
+    out = {}
+    for p in pairs or ():
+        k, _, v = p.partition("=")
+        if v.lower() in ("true", "false"):
+            out[k] = v.lower() == "true"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+    return out
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                save_hlo: str | None = None, overrides=None) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = steps_lib.rules_for(shape, cfg)
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            lowered, (fn, args) = _train_lowered(cfg, shape, mesh, rules)
+        elif shape.kind == "prefill":
+            lowered, (fn, args) = _prefill_lowered(cfg, shape, mesh, rules)
+        else:
+            lowered, (fn, args) = _decode_lowered(cfg, shape, mesh, rules)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        # loop-corrected global flops/bytes (cost_analysis counts while
+        # bodies once — see launch/flops.py docstring)
+        jcost = step_costs(fn, *args)
+    info = summarize_cell(compiled)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(compiled.as_text())
+    n_chips = 512 if multi_pod else 256
+    model_flops = _model_flops(cfg, shape, n_chips)
+    flops_chip = jcost["flops"] / n_chips
+    bytes_chip = jcost["hbm_bytes_model"] / n_chips
+    info["cost_analysis_raw"] = {"flops": info.pop("flops"),
+                                 "hbm_bytes": info.pop("hbm_bytes")}
+    info["jaxpr_costs_global"] = jcost
+    info["roofline"] = roofline_terms(
+        flops_chip, bytes_chip, info["collectives"]["total_bytes"])
+    info.update({
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "n_chips": n_chips,
+        "flops_per_chip": flops_chip,
+        "hbm_bytes_per_chip_model": bytes_chip,
+        "model_flops_per_chip": model_flops,
+        "useful_flops_ratio": (model_flops / flops_chip
+                               if flops_chip else None),
+        "param_count": cfg.param_count(),
+        "param_count_active": cfg.param_count(active_only=True),
+        "peak_hbm_frac": (info["memory_analysis"]["temp_size_in_bytes"]
+                          + info["memory_analysis"]["argument_size_in_bytes"])
+        / (HW["hbm_bytes"]),
+    })
+    ga = GRAD_ACCUM["2x16x16" if multi_pod else "16x16"]
+    info.update(_analytic_memory(cfg, shape, n_chips, ga))
+    return info
+
+
+def _analytic_memory(cfg, shape, n_chips: int, grad_accum: int) -> dict:
+    """TPU-realistic per-chip HBM model (bytes).
+
+    CPU-XLA's ``memory_analysis`` materializes fp32 dot outputs that the
+    MXU keeps in registers (verified in the HLO: fp32 copies of bf16
+    weight-grad dots / hoisted converts), so it over-states TPU residency.
+    This model counts what actually lives in HBM on TPU:
+      params + optimizer state + gradient accumulator + one micro-grad
+      tree + remat checkpoints + KV/state caches + a transient allowance
+      (weight gathers + attention/SSD working set ≈ 2 GB).
+    """
+    import numpy as np
+    P = cfg.param_count()
+    psz = jnp.dtype(cfg.param_dtype).itemsize
+    params = P * psz / n_chips
+    if shape.kind == "train":
+        gsz = jnp.dtype(cfg.grad_accum_dtype).itemsize
+        opt = (2 * P * 4 if cfg.optimizer == "adamw" else P * 0.05) / n_chips
+        grads = 2 * P * gsz / n_chips            # accumulator + micro tree
+        batch_shards = max(1, n_chips // 16)      # data (× pod) axes
+        tokens_dev = (shape.global_batch // grad_accum * shape.seq_len
+                      // batch_shards)
+        # per-group carry checkpoints (bf16) over the layer scan
+        ckpt = cfg.n_repeats * tokens_dev * cfg.d_model * 2
+        cache = 0
+    else:
+        opt = grads = ckpt = 0
+        cache = 0
+        if shape.kind == "decode":
+            kv_layers = sum(1 for k in cfg.pattern
+                            if k.startswith(("attn", "xattn"))) \
+                * cfg.n_repeats
+            cache = (2 * kv_layers * shape.global_batch * shape.seq_len
+                     * cfg.kv_dim * 2) / n_chips
+            if "mamba" in "".join(cfg.pattern):
+                di = cfg.d_inner
+                cache += (cfg.n_layers * shape.global_batch
+                          * (cfg.ssm_heads * cfg.ssm_headdim * cfg.d_state
+                             + (cfg.d_conv - 1)
+                             * (di + 2 * cfg.ssm_groups * cfg.d_state))
+                          * 4) / n_chips
+    transient = 2e9
+    total = params + opt + grads + ckpt + cache + transient
+    return {"analytic_hbm_gb": round(total / 1e9, 2),
+            "analytic_fits": bool(total <= HW["hbm_bytes"]),
+            "analytic_parts_gb": {
+                "params": round(params / 1e9, 2),
+                "opt": round(opt / 1e9, 2),
+                "grads": round(grads / 1e9, 2),
+                "ckpt": round(ckpt / 1e9, 2),
+                "cache": round(cache / 1e9, 2),
+                "transient_allowance": 2.0}}
+
+
+def _model_flops(cfg, shape, n_chips: int) -> float:
+    """6·N_active·D per chip (training); forward-only thirds for serving."""
+    n_active = cfg.param_count(active_only=True)
+    tokens = shape.global_batch * shape.seq_len
+    if cfg.family == "encdec":
+        # encoder params see L/2 frames, decoder params L/2 tokens
+        tokens //= 2
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens / n_chips
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens / n_chips
+    # decode: one token per sequence (matmul flops only; attention reads
+    # the KV cache — that cost shows up in the memory term, not FLOPs)
+    return 2.0 * n_active * shape.global_batch / n_chips
+
+
+def iter_cells():
+    for arch in ARCHS:
+        for shape_name in SHAPES:
+            yield arch, shape_name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--override", action="append", default=None,
+                    help="cfg field override, e.g. kv_cache_dtype=int8 "
+                         "(repeatable); result tagged with --variant")
+    ap.add_argument("--variant", default=None,
+                    help="suffix for the output JSON of an override run")
+    args = ap.parse_args()
+
+    overrides = _parse_overrides(args.override)
+    os.makedirs(args.out, exist_ok=True)
+    cells = (list(iter_cells()) if args.all
+             else [(args.arch, args.shape)])
+    for arch, shape_name in cells:
+        tag = f"{arch}__{shape_name}__{'2x16x16' if args.multi_pod else '16x16'}"
+        if args.variant:
+            tag += f"__{args.variant}"
+        out_path = os.path.join(args.out, tag + ".json")
+        try:
+            info = dryrun_cell(arch, shape_name, multi_pod=args.multi_pod,
+                               save_hlo=args.save_hlo, overrides=overrides)
+        except Exception:
+            info = {"arch": arch, "shape": shape_name,
+                    "mesh": "2x16x16" if args.multi_pod else "16x16",
+                    "status": "error", "trace": traceback.format_exc()}
+        with open(out_path, "w") as f:
+            json.dump(info, f, indent=1, default=str)
+        status = info["status"]
+        extra = ""
+        if status == "ok":
+            r = info["roofline"]
+            extra = (f" dom={r['dominant']} bound={r['bound_s']*1e3:.2f}ms"
+                     f" compile={info['compile_s']}s")
+        print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+        if status == "error":
+            print(info["trace"], flush=True)
+
+
+if __name__ == "__main__":
+    main()

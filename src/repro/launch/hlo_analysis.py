@@ -1,0 +1,111 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+``cost_analysis()`` gives HLO FLOPs and HBM byte traffic of the per-device
+SPMD module; collective bytes are NOT in cost_analysis, so we parse the
+optimized HLO text and sum result-shape bytes of every collective op
+(all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+— including their ``-start`` async forms; ``-done`` ops are skipped so
+nothing is double-counted).
+
+Terms (seconds, per chip — the SPMD module *is* the per-chip program):
+  compute    = HLO_FLOPs / peak_FLOP/s
+  memory     = HLO_bytes / HBM_bw
+  collective = collective_bytes / ICI_link_bw
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+from .mesh import HW
+
+__all__ = ["collective_bytes", "roofline_terms", "summarize_cell"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|f8e4m3fn|f8e5m2|"
+                       r"s4|s8|s16|s32|s64|u4|u8|u16|u32|u64)\[([0-9,]*)\]")
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, Any]:
+    """Sum result-shape bytes per collective op kind."""
+    per_kind: dict[str, int] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?.*?\)?)\s+"
+                     r"([a-z\-]+)(?:-start)?\(", line)
+        if not m:
+            continue
+        result_shape, op = m.groups()
+        if op.endswith("-done"):
+            continue
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in _COLLECTIVES:
+            continue
+        b = _shape_bytes(result_shape)
+        per_kind[base] = per_kind.get(base, 0) + b
+        count[base] = count.get(base, 0) + 1
+    return {"bytes_by_kind": per_kind, "count_by_kind": count,
+            "total_bytes": sum(per_kind.values())}
+
+
+def roofline_terms(flops: float, hbm_bytes: float,
+                   coll_bytes: float) -> dict[str, float]:
+    compute = flops / HW["peak_flops_bf16"]
+    memory = hbm_bytes / HW["hbm_bw"]
+    collective = coll_bytes / HW["ici_bw_per_link"]
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = sum(terms.values())
+    return dict(terms, dominant=dom, bound_s=bound,
+                overlap_fraction=bound / total if total else 0.0)
+
+
+def summarize_cell(compiled, lowered_text: str | None = None) -> dict:
+    """All measurable quantities from one compiled (arch × shape × mesh)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):       # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        mem_info[attr] = int(getattr(mem, attr, 0) or 0)
+    terms = roofline_terms(flops, hbm, coll["total_bytes"])
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "collectives": coll,
+        "memory_analysis": mem_info,
+        "roofline": terms,
+    }

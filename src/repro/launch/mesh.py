@@ -1,0 +1,41 @@
+"""Production meshes.
+
+``make_production_mesh()`` is a FUNCTION (not a module constant) so merely
+importing this module never touches jax device state — the dry-run entry
+point must set ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
+*before* the first jax device query, and smoke tests must keep seeing one
+device.
+
+Topology: TPU v5e, 16×16 = 256 chips per pod; the multi-pod mesh adds a
+leading ``pod`` axis (2 pods = 512 chips) that is pure data parallelism
+over DCN — the axis that scales to 1000+ nodes (gradient reduction is
+hierarchical: reduce-scatter over ICI inside the pod, all-reduce across
+pods).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "HW"]
+
+# TPU v5e hardware constants (per chip) for the roofline model.
+HW = {
+    "peak_flops_bf16": 197e12,      # FLOP/s
+    "hbm_bw": 819e9,                # bytes/s
+    "ici_bw_per_link": 50e9,        # bytes/s/link (~)
+    "hbm_bytes": 16 * 1024**3,      # 16 GB
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """All available host devices on a ("data",) mesh (tests/examples)."""
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = np.array(jax.devices())
+    return Mesh(devs.reshape(len(devs), 1), ("data", "model"))

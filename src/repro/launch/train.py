@@ -1,0 +1,113 @@
+"""Training driver: real steps on the host mesh (reduced configs) or the
+production mesh (TPU pods).
+
+CPU-scale entry point (examples / CI):
+  python -m repro.launch.train --arch qwen3-32b --smoke --steps 20
+
+On hardware the same driver runs the full config:
+  python -m repro.launch.train --arch qwen3-32b --shape train_4k \
+      --ckpt-dir /ckpt/qwen3 --steps 10000
+
+The loop is wrapped by ``runtime.TrainLoopRunner`` (atomic checkpoints,
+auto-resume, bounded retry, straggler telemetry).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..configs import SHAPES, get_config, smoke_config
+from ..data import make_batch_iterator
+from ..models import model as model_lib
+from ..models import steps as steps_lib
+from ..models.params import abstract_params, init_params, tree_shardings
+from ..runtime import TrainLoopRunner
+from .. import optim as optim_lib
+from .mesh import make_host_mesh
+
+__all__ = ["train", "main"]
+
+
+def train(arch: str, *, smoke: bool = False, steps: int = 20,
+          batch: int = 2, seq: int = 64, ckpt_dir: str | None = None,
+          ckpt_every: int = 10, seed: int = 0, lr: float = 1e-3,
+          log_fn=print, use_mesh: bool = True):
+    cfg = smoke_config(arch) if smoke else get_config(arch)
+    mesh = make_host_mesh() if use_mesh and len(jax.devices()) > 1 else None
+
+    opt = optim_lib.make_optimizer(
+        cfg.optimizer, optim_lib.cosine_schedule(lr, max(2, steps // 10),
+                                                 max(steps, 10)))
+    specs = model_lib.model_specs(cfg)
+    params = init_params(specs, seed=seed)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jax.numpy.zeros((), jax.numpy.int32)}
+    step_fn = jax.jit(steps_lib.make_train_step(cfg, opt, mesh))
+
+    data = make_batch_iterator(cfg.vocab, seq, batch, seed=seed)
+
+    def batched():
+        for step, b in data:
+            extra = {}
+            if cfg.family == "encdec":
+                rng = np.random.default_rng(seed * 131 + step)
+                extra["frames"] = rng.standard_normal(
+                    (batch, seq, cfg.d_frontend or cfg.d_model)
+                ).astype(np.float32)
+            if cfg.family == "vlm":
+                rng = np.random.default_rng(seed * 131 + step)
+                extra["img"] = rng.standard_normal(
+                    (batch, cfg.n_img_tokens, cfg.d_frontend or cfg.d_model)
+                ).astype(np.float32)
+            yield step, dict(b, **extra)
+
+    if ckpt_dir:
+        ckpt = CheckpointManager(ckpt_dir)
+        runner = TrainLoopRunner(step_fn, ckpt, ckpt_every=ckpt_every,
+                                 log_fn=log_fn)
+        state, start = runner.resume_or(state)
+        state, history = runner.run(state, batched(), steps,
+                                    start_step=start)
+        return state, history
+
+    history = []
+    for step, b in batched():
+        if step >= steps:
+            break
+        state, metrics = step_fn(state, b)
+        loss = float(metrics["loss"])
+        history.append({"step": step, "loss": loss})
+        if step % 5 == 0:
+            log_fn(f"step {step} loss {loss:.4f}")
+    return state, history
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default=None,
+                    help="full production shape (hardware only)")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+    if args.shape:
+        shape = SHAPES[args.shape]
+        args.batch, args.seq = shape.global_batch, shape.seq_len
+    _, history = train(args.arch, smoke=args.smoke or not args.shape,
+                       steps=args.steps, batch=args.batch, seq=args.seq,
+                       ckpt_dir=args.ckpt_dir, lr=args.lr)
+    if history:
+        print(f"final loss {history[-1]['loss']:.4f} "
+              f"(start {history[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

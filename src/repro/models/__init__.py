@@ -1,0 +1,6 @@
+"""LM substrate: model definitions for the assigned architectures."""
+from . import (attention, blocks, layers, model, moe, params, sharding, ssm,
+               steps)
+
+__all__ = ["attention", "blocks", "layers", "model", "moe", "params",
+           "sharding", "ssm", "steps"]

@@ -1,0 +1,217 @@
+"""Memory-efficient attention in pure JAX (TPU-lowerable, GSPMD-shardable).
+
+``flash_attention`` never materializes the (lq × lkv) score matrix: an outer
+``lax.scan`` over query chunks and an inner ``lax.scan`` over key/value
+chunks carry the running (max, denom, accumulator) triple — the standard
+online-softmax recurrence. This is what lets ``prefill_32k`` fit the HBM
+budget at compile time (a dense 32k×32k×heads score tensor would be TBs).
+
+GQA is handled by folding heads into (kv_heads, group); modes:
+  * ``causal``  — autoregressive self-attention;
+  * ``full``    — bidirectional (encoder) / cross-attention;
+  * ``local``   — chunked-local causal attention (llama4 iRoPE style):
+                  q attends only within its ``window``-sized block.
+
+``decode_attention`` is the single-token path over a (possibly
+sequence-sharded) KV cache; masking is by cache position, and the softmax
+reductions partition cleanly under GSPMD when the cache's seq dim is sharded
+(long-context serving).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention", "decode_attention"]
+
+_NEG = -1e30
+
+
+def _mask(mode: str, window: int, pos_q, pos_k):
+    """(…, lq, lk) bool mask from broadcast position vectors.
+    Negative key positions mark chunk padding and are always masked."""
+    pq = pos_q[..., :, None]
+    pk = pos_k[..., None, :]
+    valid = pk >= 0
+    if mode == "full":
+        return jnp.broadcast_to(valid,
+                                jnp.broadcast_shapes(pq.shape, pk.shape))
+    m = (pk <= pq) & valid
+    if mode == "local" and window > 0:
+        m = m & ((pq // window) == (pk // window))
+    return m
+
+
+def flash_attention(q, k, v, *, pos_q, pos_k, mode: str = "causal",
+                    window: int = 0, q_chunk: int = 1024,
+                    kv_chunk: int = 1024, exact_causal: bool = False):
+    """Online-softmax attention.
+
+    Args:
+      q: ``(b, lq, h, dh)``; k/v: ``(b, lk, kh, dh)`` with ``h % kh == 0``.
+      pos_q/pos_k: ``(b, lq)`` / ``(b, lk)`` int32 absolute positions.
+      exact_causal: skip fully-masked (q-block × kv-block) pairs with a
+        static python loop over q blocks — exact-causal executed flops
+        (≈2× fewer attention flops at long seq) at the cost of nq unrolled
+        scan programs in the HLO (§Perf compute-term lever).
+    Returns ``(b, lq, h, dh)`` in q.dtype.
+    """
+    b, lq0, h, dh = q.shape
+    lk0, kh = k.shape[1], k.shape[2]
+    qc = min(q_chunk, lq0)
+    kc = min(kv_chunk, lk0)
+    if lq0 % qc:                            # pad queries (output sliced back)
+        pad = qc - lq0 % qc
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_q = jnp.pad(pos_q, ((0, 0), (0, pad)), constant_values=0)
+    if lk0 % kc:                            # pad keys (masked via pos = -1)
+        pad = kc - lk0 % kc
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_k = jnp.pad(pos_k, ((0, 0), (0, pad)), constant_values=-1)
+    b, lq, h, dh = q.shape
+    lk = k.shape[1]
+    g = h // kh
+    scale = dh ** -0.5
+    nq, nk = lq // qc, lk // kc
+
+    qr = q.reshape(b, nq, qc, kh, g, dh).transpose(1, 0, 3, 4, 2, 5)
+    pqr = pos_q.reshape(b, nq, qc).transpose(1, 0, 2)
+    kr = k.reshape(b, nk, kc, kh, dh).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(b, nk, kc, kh, dh).transpose(1, 0, 3, 2, 4)
+    pkr = pos_k.reshape(b, nk, kc).transpose(1, 0, 2)
+
+    def make_q_step(n_kv: int):
+        def q_step(_, q_in):
+            qi, pqi = q_in                   # (b, kh, g, qc, dh), (b, qc)
+
+            @functools.partial(
+                jax.checkpoint,
+                policy=jax.checkpoint_policies.nothing_saveable)
+            def kv_step(carry, kv_in):
+                m, l, acc = carry
+                kj, vj, pkj = kv_in          # (b, kh, kc, dh), (b, kc)
+                s = jnp.einsum("bkgqd,bksd->bkgqs", qi, kj,
+                               preferred_element_type=jnp.float32) * scale
+                msk = _mask(mode, window, pqi, pkj)[:, None, None]
+                s = jnp.where(msk, s, _NEG)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                p = jnp.where(msk, p, 0.0)
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                pv = jnp.einsum("bkgqs,bksd->bkgqd", p.astype(vj.dtype), vj,
+                                preferred_element_type=jnp.float32)
+                acc_new = acc * corr[..., None] + pv
+                return (m_new, l_new, acc_new), None
+
+            m0 = jnp.full((b, kh, g, qc), _NEG, jnp.float32)
+            l0 = jnp.zeros((b, kh, g, qc), jnp.float32)
+            a0 = jnp.zeros((b, kh, g, qc, dh), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0),
+                (kr[:n_kv], vr[:n_kv], pkr[:n_kv]))
+            out = acc / jnp.maximum(l, 1e-20)[..., None]
+            return None, out                 # (b, kh, g, qc, dh)
+
+        return q_step
+
+    if exact_causal and mode == "causal" and nq > 1 and lq == lk:
+        # static python loop: q block i attends kv blocks [0, i] only.
+        outs = []
+        for i in range(nq):
+            _, oi = make_q_step((i + 1) * (qc // kc) if qc >= kc
+                                else i // (kc // qc) + 1)(
+                None, (qr[i], pqr[i]))
+            outs.append(oi)
+        outs = jnp.stack(outs)
+    else:
+        _, outs = jax.lax.scan(make_q_step(nk), None, (qr, pqr))
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, lq, h, dh)
+    return out[:, :lq0].astype(q.dtype)
+
+
+def quantize_per_token(x):
+    """int8-quantize ``x[(b, s, kh, dh)]`` with a per-(token, head) scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quantize_per_channel(x):
+    """int8-quantize with a per-(head, channel) scale shared over tokens —
+    required so the scale factors out of the PV contraction."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[:, None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decode_attention_int8(q, kq, k_scale, vq, v_scale, *, cur_pos,
+                          mode: str = "causal", window: int = 0):
+    """One-token attention over an int8-quantized KV cache (§Perf memory
+    lever): K per-token scales, V per-channel scales, both contractions run
+    int8×int8→int32, so the cache is read at 1 byte/element.
+
+    Args: q ``(b,1,h,dh)``; kq/vq ``(b,S,kh,dh)`` int8;
+          k_scale ``(b,S,kh)``; v_scale ``(b,kh,dh)``.
+    """
+    b, _, h, dh = q.shape
+    S, kh = kq.shape[1], kq.shape[2]
+    g = h // kh
+    qr = q.reshape(b, kh, g, dh)
+    q_scale = jnp.maximum(
+        jnp.max(jnp.abs(qr.astype(jnp.float32)), axis=-1) / 127.0, 1e-8)
+    qq = jnp.clip(jnp.round(qr.astype(jnp.float32) / q_scale[..., None]),
+                  -127, 127).astype(jnp.int8)
+    s32 = jnp.einsum("bkgd,bskd->bkgs", qq, kq,
+                     preferred_element_type=jnp.int32)
+    s = (s32.astype(jnp.float32) * q_scale[..., None]
+         * k_scale.transpose(0, 2, 1)[:, :, None, :]) * dh ** -0.5
+    slot = jnp.arange(S, dtype=jnp.int32)
+    msk = slot[None, :] <= cur_pos
+    if mode == "local" and window > 0:
+        msk = msk & ((slot[None, :] // window) == (cur_pos // window))
+    s = jnp.where(msk[:, None, None, :] if msk.ndim == 2
+                  else msk[None, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    # dynamic per-row scale: flat rows have p ≈ 1/S « 1/127 otherwise
+    p_scale = jnp.maximum(jnp.max(p, axis=-1, keepdims=True), 1e-9) / 127.0
+    pq = jnp.clip(jnp.round(p / p_scale), -127, 127).astype(jnp.int8)
+    o32 = jnp.einsum("bkgs,bskd->bkgd", pq, vq,
+                     preferred_element_type=jnp.int32)
+    out = (o32.astype(jnp.float32) * p_scale) * v_scale[:, :, None, :]
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, cur_pos, mode: str = "causal",
+                     window: int = 0):
+    """One-token attention over a KV cache.
+
+    Args:
+      q: ``(b, 1, h, dh)``; caches ``(b, S, kh, dh)``.
+      cur_pos: scalar int32 — position of the new token; cache slots
+        ``> cur_pos`` are masked (slot ``cur_pos`` holds the new K/V,
+        written by the caller before this call).
+    """
+    b, _, h, dh = q.shape
+    S, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    qr = q.reshape(b, kh, g, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
+                   preferred_element_type=jnp.float32) * dh ** -0.5
+    slot = jnp.arange(S, dtype=jnp.int32)
+    msk = slot[None, :] <= cur_pos
+    if mode == "local" and window > 0:
+        msk = msk & ((slot[None, :] // window) == (cur_pos // window))
+    s = jnp.where(msk[:, None, None, :] if msk.ndim == 2
+                  else msk[None, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, dh).astype(q.dtype)

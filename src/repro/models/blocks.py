@@ -1,0 +1,397 @@
+"""Layer blocks: ``<mixer>+<ffn>`` kinds, with forward / prefill / decode.
+
+Mixers: ``attn`` (causal self), ``attn_local`` (chunked-local causal,
+llama4 iRoPE), ``xattn`` (cross-attention only, llama-3.2-vision style with
+a learned gate), ``attn_cross`` (self then cross — enc-dec decoder),
+``mamba`` (SSD). FFNs: ``mlp`` (SwiGLU), ``moe``, ``none``.
+
+Every kind exposes the same three entry points so the model can scan over a
+heterogeneous pattern uniformly:
+
+  * ``block_apply``   — full-sequence training/encoding forward;
+  * ``block_prefill`` — forward + build this block's decode cache;
+  * ``block_decode``  — one-token step updating the cache in place.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_lib
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .layers import apply_rope, mlp_apply, mlp_specs, norm_spec, rms_norm
+from .params import ParamSpec
+from .sharding import shard
+
+__all__ = [
+    "parse_kind", "block_specs", "block_apply", "block_prefill",
+    "block_decode", "block_cache_specs",
+]
+
+
+def parse_kind(kind: str) -> tuple[str, str]:
+    mixer, _, ffn = kind.partition("+")
+    return mixer, (ffn or "none")
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def _attn_specs(cfg, dtype, prefix="") -> dict:
+    d, qd, kvd, dh = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.head_dim
+    s = {
+        prefix + "wq": ParamSpec((d, qd), ("embed", "heads"), dtype=dtype),
+        prefix + "wk": ParamSpec((d, kvd), ("embed", "kv"), dtype=dtype),
+        prefix + "wv": ParamSpec((d, kvd), ("embed", "kv"), dtype=dtype),
+        prefix + "wo": ParamSpec((qd, d), ("heads", "embed"), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        s[prefix + "q_norm"] = ParamSpec((dh,), (None,), init="ones",
+                                         dtype=dtype)
+        s[prefix + "k_norm"] = ParamSpec((dh,), (None,), init="ones",
+                                         dtype=dtype)
+    return s
+
+
+def block_specs(cfg, kind: str, dtype) -> dict:
+    mixer, ffn = parse_kind(kind)
+    s: dict = {"ln1": norm_spec(cfg.d_model, dtype)}
+    if mixer in ("attn", "attn_local"):
+        s.update(_attn_specs(cfg, dtype))
+    elif mixer == "xattn":
+        s.update(_attn_specs(cfg, dtype, prefix="x_"))
+        s["x_gate"] = ParamSpec((1,), (None,), init="zeros", dtype=jnp.float32)
+    elif mixer == "attn_cross":
+        s.update(_attn_specs(cfg, dtype))
+        s["ln_cross"] = norm_spec(cfg.d_model, dtype)
+        s.update(_attn_specs(cfg, dtype, prefix="x_"))
+    elif mixer == "mamba":
+        s.update(ssm_lib.mamba_specs(cfg, dtype))
+    else:
+        raise ValueError(f"unknown mixer {mixer!r}")
+    if ffn == "mlp":
+        s["ln2"] = norm_spec(cfg.d_model, dtype)
+        s["mlp"] = mlp_specs(cfg.d_model, cfg.d_ff, dtype)
+    elif ffn == "moe":
+        s["ln2"] = norm_spec(cfg.d_model, dtype)
+        s["moe"] = moe_lib.moe_specs(
+            cfg.d_model, cfg.d_ff_expert or cfg.d_ff, cfg.n_experts_padded,
+            cfg.n_shared_experts, cfg.n_experts, dtype)
+    elif ffn != "none":
+        raise ValueError(f"unknown ffn {ffn!r}")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Attention helpers
+# ---------------------------------------------------------------------------
+
+def _qkv(cfg, p, h, prefix=""):
+    b, l, _ = h.shape
+    dh = cfg.head_dim
+    q = jnp.einsum("bld,de->ble", h, p[prefix + "wq"].astype(h.dtype))
+    k = jnp.einsum("bld,de->ble", h, p[prefix + "wk"].astype(h.dtype))
+    v = jnp.einsum("bld,de->ble", h, p[prefix + "wv"].astype(h.dtype))
+    q = q.reshape(b, l, cfg.n_heads, dh)
+    k = k.reshape(b, l, cfg.n_kv_heads, dh)
+    v = v.reshape(b, l, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p[prefix + "q_norm"])
+        k = rms_norm(k, p[prefix + "k_norm"])
+    return q, k, v
+
+
+def _kv_only(cfg, p, mem, prefix="x_"):
+    b, lm, _ = mem.shape
+    dh = cfg.head_dim
+    k = jnp.einsum("bld,de->ble", mem, p[prefix + "wk"].astype(mem.dtype))
+    v = jnp.einsum("bld,de->ble", mem, p[prefix + "wv"].astype(mem.dtype))
+    k = k.reshape(b, lm, cfg.n_kv_heads, dh)
+    v = v.reshape(b, lm, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        k = rms_norm(k, p[prefix + "k_norm"])
+    return k, v
+
+
+def _self_attn(cfg, p, h, pos, mode):
+    q, k, v = _qkv(cfg, p, h)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "act_heads", None)
+    out = attn_lib.flash_attention(
+        q, k, v, pos_q=pos, pos_k=pos, mode=mode, window=cfg.window,
+        exact_causal=cfg.exact_causal_attn)
+    b, l = h.shape[:2]
+    out = out.reshape(b, l, cfg.q_dim)
+    return jnp.einsum("ble,ed->bld", out, p["wo"].astype(h.dtype))
+
+
+def _cross_attn(cfg, p, h, memory, pos_mem=None):
+    b, l, _ = h.shape
+    dh = cfg.head_dim
+    q = jnp.einsum("bld,de->ble", h, p["x_wq"].astype(h.dtype))
+    q = q.reshape(b, l, cfg.n_heads, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["x_q_norm"])
+    k, v = _kv_only(cfg, p, memory)
+    lm = memory.shape[1]
+    pos_q = jnp.zeros((b, l), jnp.int32)
+    pos_k = jnp.zeros((b, lm), jnp.int32)
+    out = attn_lib.flash_attention(q, k, v, pos_q=pos_q, pos_k=pos_k,
+                                   mode="full")
+    out = out.reshape(b, l, cfg.q_dim)
+    out = jnp.einsum("ble,ed->bld", out, p["x_wo"].astype(h.dtype))
+    if "x_gate" in p:
+        out = jnp.tanh(p["x_gate"]).astype(out.dtype) * out
+    return out
+
+
+def _ffn(cfg, p, h, ffn: str):
+    metrics = {}
+    if ffn == "none":
+        return h * 0.0, metrics          # residual no-op (mamba2 has no FFN)
+    y = rms_norm(h, p["ln2"])
+    if ffn == "mlp":
+        return mlp_apply(p["mlp"], y), metrics
+    y, metrics = moe_lib.moe_apply(
+        p["moe"], y, n_real=cfg.n_experts, top_k=cfg.top_k,
+        capacity_factor=cfg.capacity_factor, impl=cfg.moe_impl)
+    return y, metrics
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / encode)
+# ---------------------------------------------------------------------------
+
+def block_apply(cfg, kind: str, p, h, *, pos, memory=None, mode="causal"):
+    """Full-sequence forward. Returns ``(h', metrics)``."""
+    mixer, ffn = parse_kind(kind)
+    x = rms_norm(h, p["ln1"])
+    if mixer == "attn":
+        mix = _self_attn(cfg, p, x, pos, mode)
+    elif mixer == "attn_local":
+        mix = _self_attn(cfg, p, x, pos, "local")
+    elif mixer == "xattn":
+        mix = _cross_attn(cfg, p, x, memory)
+    elif mixer == "attn_cross":
+        mix = _self_attn(cfg, p, x, pos, mode)
+        h = h + mix
+        x2 = rms_norm(h, p["ln_cross"])
+        mix = _cross_attn(cfg, p, x2, memory)
+    elif mixer == "mamba":
+        mix = ssm_lib.mamba_apply(p, x, cfg)
+    h = h + mix
+    h = shard(h, "batch", "seq", "act_embed")
+    y, metrics = _ffn(cfg, p, h, ffn)
+    if parse_kind(kind)[1] != "none":
+        h = h + y
+    return h, metrics
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode caches
+# ---------------------------------------------------------------------------
+
+def block_cache_specs(cfg, kind: str, batch: int, seq: int, mem_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """Cache shapes+logical axes for one block (used for dry-run specs)."""
+    mixer, _ = parse_kind(kind)
+    kv = ("batch", "seq_shard", None, None)
+    out: dict = {}
+    if mixer in ("attn", "attn_local", "attn_cross"):
+        shp = (batch, seq, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.kv_cache_dtype == "int8":
+            out["k"] = (shp, kv, jnp.int8)
+            out["v"] = (shp, kv, jnp.int8)
+            out["k_scale"] = ((batch, seq, cfg.n_kv_heads),
+                              ("batch", "seq_shard", None), jnp.float32)
+            out["v_scale"] = ((batch, cfg.n_kv_heads, cfg.head_dim),
+                              ("batch", None, None), jnp.float32)
+        else:
+            out["k"] = (shp, kv, dtype)
+            out["v"] = (shp, kv, dtype)
+    if mixer in ("xattn", "attn_cross"):
+        shp = (batch, mem_len, cfg.n_kv_heads, cfg.head_dim)
+        out["ck"] = (shp, ("batch", None, None, None), dtype)
+        out["cv"] = (shp, ("batch", None, None, None), dtype)
+    if mixer == "mamba":
+        # state sharded over `model` on heads/channels: the decode compute
+        # produces exactly that layout (in_proj is mlp-sharded), so an
+        # unsharded spec would force a full-state all-gather every step
+        # (§Perf iteration S2).
+        shapes = ssm_lib.mamba_cache_shape(cfg, batch)
+        out["conv"] = (shapes["conv"], ("batch", None, "act_mlp"),
+                       jnp.float32)
+        out["ssd"] = (shapes["ssd"], ("batch", "act_heads", None, None),
+                      jnp.float32)
+    return out
+
+
+def block_prefill(cfg, kind: str, p, h, *, pos, memory=None):
+    """Forward + build this block's decode cache. Returns (h', cache)."""
+    mixer, ffn = parse_kind(kind)
+    cache: dict = {}
+    x = rms_norm(h, p["ln1"])
+    if mixer in ("attn", "attn_local", "attn_cross"):
+        q, k, v = _qkv(cfg, p, x)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        mode = "local" if mixer == "attn_local" else "causal"
+        out = attn_lib.flash_attention(q, k, v, pos_q=pos, pos_k=pos,
+                                       mode=mode, window=cfg.window,
+                                       exact_causal=cfg.exact_causal_attn)
+        b, l = h.shape[:2]
+        mix = jnp.einsum("ble,ed->bld", out.reshape(b, l, cfg.q_dim),
+                         p["wo"].astype(h.dtype))
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = attn_lib.quantize_per_token(k)
+            vq, vs = attn_lib.quantize_per_channel(v)
+            cache["k"] = shard(kq, "batch", "seq_shard", None, None)
+            cache["v"] = shard(vq, "batch", "seq_shard", None, None)
+            cache["k_scale"] = shard(ks, "batch", "seq_shard", None)
+            cache["v_scale"] = vs
+        else:
+            cache["k"] = shard(k.astype(jnp.bfloat16),
+                               "batch", "seq_shard", None, None)
+            cache["v"] = shard(v.astype(jnp.bfloat16),
+                               "batch", "seq_shard", None, None)
+        h = h + mix
+        if mixer == "attn_cross":
+            x2 = rms_norm(h, p["ln_cross"])
+            h = h + _cross_attn(cfg, p, x2, memory)
+            ck, cv = _kv_only(cfg, p, memory)
+            cache["ck"], cache["cv"] = (ck.astype(jnp.bfloat16),
+                                        cv.astype(jnp.bfloat16))
+    elif mixer == "xattn":
+        mix = _cross_attn(cfg, p, x, memory)
+        ck, cv = _kv_only(cfg, p, memory)
+        cache["ck"], cache["cv"] = (ck.astype(jnp.bfloat16),
+                                    cv.astype(jnp.bfloat16))
+        h = h + mix
+    elif mixer == "mamba":
+        # Prefill the SSD state by running the full mixer, then replaying
+        # the final state via a scan-free shortcut: run apply for outputs
+        # and a per-chunk scan for the state. For simplicity and exactness
+        # we recompute the state with a full scan over the sequence.
+        mix, cache = _mamba_prefill(cfg, p, x)
+        h = h + mix
+    y, metrics = _ffn(cfg, p, h, ffn)
+    if ffn != "none":
+        h = h + y
+    return h, cache
+
+
+def _mamba_prefill(cfg, p, x):
+    """SSD forward + final (conv, ssd) state for decode."""
+    out = ssm_lib.mamba_apply(p, x, cfg)
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.d_state
+    h_, pd = cfg.ssm_heads, cfg.ssm_headdim
+    z, xBC, dt = ssm_lib._project(p, x, cfg)
+    conv_state = xBC[:, -(cfg.d_conv - 1):, :].astype(jnp.float32)
+    xBC = jax.nn.silu(ssm_lib._causal_conv(
+        xBC, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype)))
+    xs, B, C = ssm_lib._split_xbc(xBC, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    dA = dt * A[None, None, :]
+    # final state via chunked scan (states only, no outputs)
+    c = min(cfg.ssm_chunk, x.shape[1])
+    b, l = x.shape[:2]
+    xdt_flat = xs.astype(jnp.float32) * dt[..., None]
+    if l % c:                     # pad tail: zero xdt / dA leave state as-is
+        pad = c - l % c
+        xdt_flat = jnp.pad(xdt_flat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = l + pad
+    nc = l // c
+    xdt = xdt_flat.reshape(b, nc, c, h_, pd)
+    dAc = dA.reshape(b, nc, c, h_).transpose(0, 3, 1, 2)
+    A_cs = jnp.cumsum(dAc, axis=-1)
+    Bc = B.astype(jnp.float32).reshape(b, nc, c, h_, n)
+    decay_to_end = jnp.exp(A_cs[..., -1:] - A_cs)              # (b,h,nc,c)
+    states = jnp.einsum("bzlhn,bhzl,bzlhp->bzhpn", Bc, decay_to_end, xdt)
+    chunk_decay = jnp.exp(A_cs[..., -1]).transpose(0, 2, 1)
+
+    def step(S, inp):
+        st, dec = inp
+        return S * dec[..., None, None] + st, None
+
+    S, _ = jax.lax.scan(step, jnp.zeros((b, h_, pd, n), jnp.float32),
+                        (states.transpose(1, 0, 2, 3, 4),
+                         chunk_decay.transpose(1, 0, 2)))
+    return out, {"conv": conv_state, "ssd": S}
+
+
+def block_decode(cfg, kind: str, p, h, cache, *, pos, memory=None):
+    """One-token step. ``h[(b, 1, d)]``; ``pos`` scalar int32 = slot of the
+    new token (cache slots ``< pos`` already filled). Returns (h', cache')."""
+    mixer, ffn = parse_kind(kind)
+    cache = dict(cache)
+    x = rms_norm(h, p["ln1"])
+    b = h.shape[0]
+    if mixer in ("attn", "attn_local", "attn_cross"):
+        q, k, v = _qkv(cfg, p, x)
+        pos_b = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+        q = apply_rope(q, pos_b, cfg.rope_theta)
+        k = apply_rope(k, pos_b, cfg.rope_theta)
+        mode = "local" if mixer == "attn_local" else "causal"
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = attn_lib.quantize_per_token(k)
+            # clamp the new V into the prefill-time per-channel scale
+            vsc = cache["v_scale"][:, None]
+            vq = jnp.clip(jnp.round(v.astype(jnp.float32) / vsc),
+                          -127, 127).astype(jnp.int8)
+            kc = jax.lax.dynamic_update_slice(cache["k"], kq, (0, pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], vq, (0, pos, 0, 0))
+            ksc = jax.lax.dynamic_update_slice(cache["k_scale"], ks,
+                                               (0, pos, 0))
+            cache["k"], cache["v"], cache["k_scale"] = kc, vc, ksc
+            out = attn_lib.decode_attention_int8(
+                q, kc, ksc, vc, cache["v_scale"], cur_pos=pos, mode=mode,
+                window=cfg.window)
+        else:
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            cache["k"], cache["v"] = kc, vc
+            out = attn_lib.decode_attention(
+                q, kc.astype(h.dtype), vc.astype(h.dtype), cur_pos=pos,
+                mode=mode, window=cfg.window)
+        mix = jnp.einsum("ble,ed->bld", out.reshape(b, 1, cfg.q_dim),
+                         p["wo"].astype(h.dtype))
+        h = h + mix
+        if mixer == "attn_cross":
+            x2 = rms_norm(h, p["ln_cross"])
+            h = h + _decode_cross(cfg, p, x2, cache)
+    elif mixer == "xattn":
+        h = h + _decode_cross(cfg, p, x, cache)
+    elif mixer == "mamba":
+        mix, new_state = ssm_lib.mamba_decode(p, x, cache, cfg)
+        cache.update(new_state)
+        h = h + mix
+    y, _ = _ffn(cfg, p, h, ffn)
+    if ffn != "none":
+        h = h + y
+    return h, cache
+
+
+def _decode_cross(cfg, p, x, cache):
+    b = x.shape[0]
+    dh = cfg.head_dim
+    q = jnp.einsum("bld,de->ble", x, p["x_wq"].astype(x.dtype))
+    q = q.reshape(b, 1, cfg.n_heads, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["x_q_norm"])
+    lm = cache["ck"].shape[1]
+    out = attn_lib.decode_attention(
+        q, cache["ck"].astype(x.dtype), cache["cv"].astype(x.dtype),
+        cur_pos=jnp.int32(lm - 1), mode="full")
+    out = jnp.einsum("ble,ed->bld", out.reshape(b, 1, cfg.q_dim),
+                     p["x_wo"].astype(x.dtype))
+    if "x_gate" in p:
+        out = jnp.tanh(p["x_gate"]).astype(out.dtype) * out
+    return out

@@ -1,0 +1,62 @@
+"""Shared layer primitives: RMSNorm, RoPE, SwiGLU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .params import ParamSpec
+
+__all__ = [
+    "rms_norm", "rope_freqs", "apply_rope", "swiglu", "mlp_specs", "mlp_apply",
+    "norm_spec",
+]
+
+
+def norm_spec(d: int, dtype=jnp.float32) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="ones", dtype=dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * weight.astype(jnp.float32)
+            ).astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """Rotate ``x[(b, l, h, dh)]`` by ``positions[(b, l)]`` (int32)."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv     # (b, l, dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp_specs(d: int, d_ff: int, dtype=jnp.float32) -> dict:
+    return {
+        "w_gate": ParamSpec((d, d_ff), ("embed", "mlp"), dtype=dtype),
+        "w_up": ParamSpec((d, d_ff), ("embed", "mlp"), dtype=dtype),
+        "w_down": ParamSpec((d_ff, d), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    dt = x.dtype
+    g = jnp.einsum("bld,df->blf", x, w_gate.astype(dt))
+    u = jnp.einsum("bld,df->blf", x, w_up.astype(dt))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("blf,fd->bld", h, w_down.astype(dt))
+
+
+def mlp_apply(params, x):
+    return swiglu(x, params["w_gate"], params["w_up"], params["w_down"])

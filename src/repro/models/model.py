@@ -1,0 +1,237 @@
+"""Unified LM: embedding → scanned heterogeneous block pattern → logits.
+
+One definition covers all ten assigned architectures. The repeating layer
+``pattern`` (from the ArchConfig) is the scan body; parameters for each
+pattern position are stacked along a leading ``layers`` axis, so the HLO
+contains exactly one copy of the pattern-group body regardless of depth —
+this is what keeps 72-layer/398B compiles tractable and is the standard
+production trick (MaxText-style scanned layers + remat).
+
+Entry points:
+  * ``forward``      — full-sequence logits (training / encoder teacher-forcing);
+  * ``prefill``      — logits + per-block decode caches;
+  * ``decode_step``  — one token in, one token out, caches updated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks as blk
+from .layers import norm_spec, rms_norm
+from .params import ParamSpec
+from .sharding import shard
+
+__all__ = [
+    "model_specs", "forward", "prefill", "decode_step", "cache_specs",
+]
+
+
+# ---------------------------------------------------------------------------
+# Parameter tree
+# ---------------------------------------------------------------------------
+
+def _stack_specs(specs, n: int):
+    def f(s: ParamSpec):
+        return ParamSpec((n,) + s.shape, ("layers",) + s.axes, init=s.init,
+                         dtype=s.dtype,
+                         fan_in_dims=tuple(d + 1 for d in s.fan_in_dims)
+                         or tuple(range(1, max(2, len(s.shape)))))
+    return jax.tree.map(f, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def model_specs(cfg) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    specs: dict = {
+        "embed": ParamSpec((cfg.vocab_padded, d), ("vocab", "embed"),
+                           init="small", dtype=dtype),
+        "out_norm": norm_spec(d, dtype),
+        "blocks": {
+            f"p{j}": _stack_specs(blk.block_specs(cfg, kind, dtype),
+                                  cfg.n_repeats)
+            for j, kind in enumerate(cfg.pattern)
+        },
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.vocab_padded, d),
+                                     ("vocab", "embed"), init="small",
+                                     dtype=dtype)
+    if cfg.family == "encdec":
+        n_enc_rep = cfg.n_enc_layers // len(cfg.enc_pattern)
+        specs["encoder"] = {
+            "frontend_proj": ParamSpec(
+                (cfg.d_frontend or d, d), (None, "embed"), dtype=dtype),
+            "blocks": {
+                f"p{j}": _stack_specs(blk.block_specs(cfg, kind, dtype),
+                                      n_enc_rep)
+                for j, kind in enumerate(cfg.enc_pattern)
+            },
+            "norm": norm_spec(d, dtype),
+        }
+    if cfg.family == "vlm":
+        specs["img_proj"] = ParamSpec((cfg.d_frontend or d, d),
+                                      (None, "embed"), dtype=dtype)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Core scans
+# ---------------------------------------------------------------------------
+
+def _scan_blocks(cfg, block_params, h, pos, memory, mode, remat: bool):
+    """Forward scan over stacked pattern groups; accumulates MoE aux.
+
+    Remat is applied per *layer*, not just per pattern group: a group body
+    of e.g. 8 layers (jamba) would otherwise keep all 8 layers' recomputed
+    backward residuals live at once.
+    """
+
+    policy = (jax.checkpoint_policies.nothing_saveable
+              if cfg.remat_policy == "nothing"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    def one_layer(kind, p, h):
+        return blk.block_apply(cfg, kind, p, h, pos=pos, memory=memory,
+                               mode=mode)
+
+    # Only patterns with >2 layers per group get the inner per-layer
+    # checkpoint (bounds the backward working set to one layer); short
+    # groups would pay an extra forward recompute for nothing.
+    if remat and len(cfg.pattern) > 2:
+        one_layer = jax.checkpoint(one_layer, policy=policy,
+                                   static_argnums=(0,))
+
+    def body(carry, group):
+        h, aux = carry
+        for j, kind in enumerate(cfg.pattern):
+            h, metrics = one_layer(kind, group[f"p{j}"], h)
+            aux = aux + metrics.get("moe_aux", 0.0)
+        h = shard(h, "batch", "seq", "act_embed")
+        return (h, aux), None
+
+    if remat:
+        # outer checkpoint: only the group-boundary carry is saved per
+        # scan step; inner per-layer checkpoints bound the recompute
+        # working set to a single layer.
+        body = jax.checkpoint(body, policy=policy)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                               block_params)
+    return h, aux
+
+
+def _scan_enc(cfg, enc_params, h, pos, remat: bool):
+    def body(carry, group):
+        for j, kind in enumerate(cfg.enc_pattern):
+            carry, _ = blk.block_apply(cfg, kind, group[f"p{j}"], carry,
+                                       pos=pos, mode="full")
+        return carry, None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, enc_params["blocks"])
+    return rms_norm(h, enc_params["norm"])
+
+
+def _embed_tokens(cfg, params, tokens):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    return shard(h.astype(jnp.dtype(cfg.act_dtype)),
+                 "batch", "seq", "act_embed")
+
+
+def _unembed(cfg, params, h):
+    w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bld,vd->blv", h, w.astype(h.dtype))
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def _memory_of(cfg, params, frames=None, img=None, remat=True):
+    """Stub-frontend → backbone memory (enc-dec encode / vlm projection)."""
+    if cfg.family == "encdec":
+        enc = params["encoder"]
+        h = jnp.einsum("blf,fd->bld",
+                       frames.astype(jnp.dtype(cfg.act_dtype)),
+                       enc["frontend_proj"].astype(jnp.dtype(cfg.act_dtype)))
+        h = shard(h, "batch", "seq", "act_embed")
+        pos = jnp.broadcast_to(
+            jnp.arange(frames.shape[1], dtype=jnp.int32)[None],
+            frames.shape[:2])
+        return _scan_enc(cfg, enc, h, pos, remat)
+    if cfg.family == "vlm":
+        return jnp.einsum("blf,fd->bld",
+                          img.astype(jnp.dtype(cfg.act_dtype)),
+                          params["img_proj"].astype(jnp.dtype(cfg.act_dtype)))
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def forward(cfg, params, tokens, *, frames=None, img=None, remat=True):
+    """Training forward: logits ``(b, l, vocab_padded)`` + aux losses."""
+    memory = _memory_of(cfg, params, frames, img, remat)
+    h = _embed_tokens(cfg, params, tokens)
+    b, l = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32)[None], (b, l))
+    h, aux = _scan_blocks(cfg, params["blocks"], h, pos, memory, "causal",
+                          remat)
+    h = rms_norm(h, params["out_norm"])
+    return _unembed(cfg, params, h), {"moe_aux": aux}
+
+
+def prefill(cfg, params, tokens, *, frames=None, img=None):
+    """Prompt processing: returns (last-token logits, cache pytree)."""
+    memory = _memory_of(cfg, params, frames, img, remat=False)
+    h = _embed_tokens(cfg, params, tokens)
+    b, l = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32)[None], (b, l))
+
+    def body(h, group):
+        caches = {}
+        for j, kind in enumerate(cfg.pattern):
+            h, cache = blk.block_prefill(cfg, kind, group[f"p{j}"], h,
+                                         pos=pos, memory=memory)
+            caches[f"p{j}"] = cache
+        return h, caches
+
+    h, cache = jax.lax.scan(body, h, params["blocks"])
+    h = rms_norm(h, params["out_norm"])
+    logits = _unembed(cfg, params, h[:, -1:, :])
+    return logits, cache
+
+
+def decode_step(cfg, params, cache, token, pos):
+    """One decode step. ``token[(b, 1)]``, ``pos`` scalar int32 = slot of the
+    new token. Returns (logits[(b, 1, V)], cache')."""
+    h = _embed_tokens(cfg, params, token)
+
+    def body(h, xs):
+        group, cache_in = xs
+        cache_out = {}
+        for j, kind in enumerate(cfg.pattern):
+            h, c = blk.block_decode(cfg, kind, group[f"p{j}"], h,
+                                    cache_in[f"p{j}"], pos=pos)
+            cache_out[f"p{j}"] = c
+        return h, cache_out
+
+    h, new_cache = jax.lax.scan(body, h, (params["blocks"], cache))
+    h = rms_norm(h, params["out_norm"])
+    return _unembed(cfg, params, h), new_cache
+
+
+def cache_specs(cfg, batch: int, seq: int, mem_len: int) -> dict:
+    """(shape, logical axes, dtype) tree matching prefill's cache output —
+    stacked along the scan (layers) axis."""
+    out = {}
+    for j, kind in enumerate(cfg.pattern):
+        per = blk.block_cache_specs(cfg, kind, batch, seq, mem_len)
+        out[f"p{j}"] = {
+            name: ((cfg.n_repeats,) + shape, ("layers",) + axes, dtype)
+            for name, (shape, axes, dtype) in per.items()
+        }
+    return out

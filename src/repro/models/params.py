@@ -1,0 +1,146 @@
+"""Module-free parameter trees: specs, init, and mesh shardings.
+
+Models declare nested dicts of :class:`ParamSpec` (shape + *logical axes* +
+init). From one spec tree we derive:
+
+* materialized params (smoke tests / real training) — deterministic per-leaf
+  PRNG streams;
+* abstract ``ShapeDtypeStruct`` trees **with shardings attached** for the
+  dry-run (no host allocation — a 398B model never touches RAM);
+* ``NamedSharding`` trees from logical→mesh-axis rules (the MaxText-style
+  indirection that lets one model definition run on any mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = [
+    "ParamSpec", "init_params", "abstract_params", "tree_shardings",
+    "LOGICAL_RULES", "logical_to_spec", "spec_bytes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis names per dim
+    init: str = "normal"                  # normal | zeros | ones | small
+    dtype: Any = jnp.float32
+    fan_in_dims: tuple[int, ...] = ()     # dims forming fan-in (default dim 0..-2)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+# Logical axis → mesh axes. `embed` is the FSDP axis (params sharded over
+# `data`); head/ffn/expert/vocab dims are the TP/EP axis (`model`). The
+# `pod` axis is pure DP: params replicated across pods, batch split.
+LOGICAL_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "batch_nopod": "data",
+    "embed": ("pod", "data"),   # FSDP for params (ZeRO-3 across pods too)
+    "vocab": "model",
+    "heads": "model",       # fused n_heads*head_dim param dims
+    "kv": "model",
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,     # expert inner dim (experts already take `model`)
+    "layers": None,
+    "seq": None,
+    "seq_shard": "model",   # KV-cache seq dim (batch occupies `data`);
+                            # long_context_rules remaps to ("data","model")
+    "conv": None,
+    "state": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "act_mlp": "model",
+}
+
+
+def logical_to_spec(axes, rules: Mapping[str, Any] | None = None,
+                    mesh: Mesh | None = None) -> PartitionSpec:
+    rules = LOGICAL_RULES if rules is None else rules
+    names = set(mesh.axis_names) if mesh is not None else None
+
+    def resolve(a):
+        if a is None:
+            return None
+        r = rules.get(a)
+        if r is None:
+            return None
+        if isinstance(r, tuple):
+            kept = tuple(x for x in r if names is None or x in names)
+            return kept if kept else None
+        if names is not None and r not in names:
+            return None
+        return r
+
+    return PartitionSpec(*[resolve(a) for a in axes])
+
+
+def _init_leaf(spec: ParamSpec, key) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_dims = spec.fan_in_dims or tuple(range(max(1, len(spec.shape) - 1)))
+    fan_in = int(np.prod([spec.shape[d] for d in fan_dims])) or 1
+    scale = 0.02 if spec.init == "small" else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale
+            ).astype(spec.dtype)
+
+
+def _iter_leaves(tree, path=()):
+    if isinstance(tree, ParamSpec):
+        yield path, tree
+        return
+    assert isinstance(tree, Mapping), type(tree)
+    for k in sorted(tree):
+        yield from _iter_leaves(tree[k], path + (k,))
+
+
+def init_params(spec_tree, seed: int = 0):
+    """Materialize the tree (deterministic per-leaf streams keyed by path)."""
+    root = jax.random.key(seed)
+    out: dict = {}
+    for path, spec in _iter_leaves(spec_tree):
+        key = root
+        for part in path:
+            key = jax.random.fold_in(key, hash(part) & 0x7FFFFFFF)
+        node = out
+        for part in path[:-1]:
+            node = node.setdefault(part, {})
+        node[path[-1]] = _init_leaf(spec, key)
+    return out
+
+
+def abstract_params(spec_tree, mesh: Mesh | None = None,
+                    rules: Mapping[str, Any] | None = None):
+    """ShapeDtypeStruct tree (+ shardings when a mesh is given) — dry-run."""
+    def leaf(spec: ParamSpec):
+        sharding = None
+        if mesh is not None:
+            sharding = NamedSharding(mesh, logical_to_spec(spec.axes, rules, mesh))
+        return jax.ShapeDtypeStruct(spec.shape, spec.dtype, sharding=sharding)
+    return jax.tree.map(leaf, spec_tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def tree_shardings(spec_tree, mesh: Mesh,
+                   rules: Mapping[str, Any] | None = None):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, logical_to_spec(s.axes, rules, mesh)),
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def spec_bytes(spec_tree) -> int:
+    total = 0
+    for _, spec in _iter_leaves(spec_tree):
+        total += int(np.prod(spec.shape)) * jnp.dtype(spec.dtype).itemsize
+    return total

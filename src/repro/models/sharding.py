@@ -1,0 +1,67 @@
+"""Activation-sharding context: logical constraints inside model code.
+
+Model code calls ``shard(x, "batch", "seq", None)``; when a mesh context is
+active (set by the step factories in ``launch``/``models.steps``) this
+becomes a ``with_sharding_constraint`` under the active logical→mesh rules;
+with no context it is a no-op (smoke tests on 1 device).
+
+Rules are swappable per input shape: ``long_context_rules()`` turns off
+batch sharding (batch=1) and shards KV-cache sequence dims over
+``(data, model)`` instead.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Mapping
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from .params import LOGICAL_RULES, logical_to_spec
+
+__all__ = ["use_mesh_rules", "shard", "active_mesh_rules",
+           "default_rules", "long_context_rules"]
+
+_CTX: contextvars.ContextVar[tuple[Mesh, Mapping[str, Any]] | None] = \
+    contextvars.ContextVar("repro_mesh_rules", default=None)
+
+
+def default_rules() -> dict[str, Any]:
+    return dict(LOGICAL_RULES)
+
+
+def long_context_rules() -> dict[str, Any]:
+    """batch=1 long-context serving: shard sequence, not batch."""
+    rules = dict(LOGICAL_RULES)
+    rules.update({
+        "batch": None,
+        "batch_nopod": None,
+        # decode activations have seq-len 1 — only the KV caches carry the
+        # long dimension, sharded over the whole mesh:
+        "seq_shard": ("data", "model"),
+        "act_heads": None,              # heads follow seq-sharded KV instead
+    })
+    return rules
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh | None, rules: Mapping[str, Any] | None = None):
+    token = _CTX.set((mesh, rules or default_rules()) if mesh else None)
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def active_mesh_rules():
+    return _CTX.get()
+
+
+def shard(x, *axes):
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = logical_to_spec(axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

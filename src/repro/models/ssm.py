@@ -1,0 +1,197 @@
+"""Mamba2 (SSD — state-space duality) mixer: chunked train/prefill + O(1) decode.
+
+The chunked SSD algorithm (Dao & Gu 2024, "minimal SSD"): the sequence is
+split into chunks of ``chunk`` steps; within a chunk the recurrence is
+computed as a small quadratic attention-like matmul (MXU-friendly), across
+chunks a linear ``lax.scan`` carries the (h, p, n) state. This keeps
+training cost O(L·chunk) and — crucially for the ``long_500k`` cells — the
+decode state is O(1) in sequence length (one (h, p, n) tensor + a d_conv-1
+convolution tail).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .params import ParamSpec
+from .layers import rms_norm
+from .sharding import shard
+
+__all__ = ["mamba_specs", "mamba_apply", "mamba_decode", "mamba_cache_shape"]
+
+
+def _dims(cfg):
+    di = cfg.d_inner
+    g, n = cfg.ssm_groups, cfg.d_state
+    h, p = cfg.ssm_heads, cfg.ssm_headdim
+    return di, g, n, h, p
+
+
+def mamba_specs(cfg, dtype=jnp.float32) -> dict:
+    di, g, n, h, p = _dims(cfg)
+    conv_ch = di + 2 * g * n
+    return {
+        "in_proj": ParamSpec((cfg.d_model, 2 * di + 2 * g * n + h),
+                             ("embed", "mlp"), dtype=dtype),
+        "conv_w": ParamSpec((cfg.d_conv, conv_ch), (None, "mlp"),
+                            init="small", dtype=dtype),
+        "conv_b": ParamSpec((conv_ch,), ("mlp",), init="zeros", dtype=dtype),
+        "A_log": ParamSpec((h,), (None,), init="ones", dtype=jnp.float32),
+        "dt_bias": ParamSpec((h,), (None,), init="zeros", dtype=jnp.float32),
+        "D": ParamSpec((h,), (None,), init="ones", dtype=jnp.float32),
+        "norm": ParamSpec((di,), ("mlp",), init="ones", dtype=dtype),
+        "out_proj": ParamSpec((di, cfg.d_model), ("mlp", "embed"),
+                              dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along seq: ``x[(b, l, ch)]``, ``w[(dc, ch)]``."""
+    dc = w.shape[0]
+    out = x * w[-1][None, None, :]
+    for t in range(dc - 1):
+        shift = dc - 1 - t
+        out = out + jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :-shift] \
+            * w[t][None, None, :]
+    return out + b[None, None, :]
+
+
+def _ssd_chunked(xdt, dA, B, C, chunk: int):
+    """Chunked SSD. xdt: (b,l,h,p) = x·dt; dA: (b,l,h); B/C: (b,l,h,n)
+    (groups pre-expanded to heads). Returns (b,l,h,p)."""
+    b, l, h, p = xdt.shape
+    n = B.shape[-1]
+    c = min(chunk, l)
+    if l % c:                      # pad tail (zero xdt ⇒ zero contribution)
+        pad = c - l % c
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return _ssd_chunked(xdt, dA, B, C, c)[:, :l]
+    nc = l // c
+    xc = xdt.reshape(b, nc, c, h, p)
+    dAc = dA.reshape(b, nc, c, h).transpose(0, 3, 1, 2)       # (b,h,nc,c)
+    Bc = B.reshape(b, nc, c, h, n)
+    Cc = C.reshape(b, nc, c, h, n)
+    A_cs = jnp.cumsum(dAc, axis=-1)                            # (b,h,nc,c)
+
+    # 1. intra-chunk (quadratic within chunk — the MXU part)
+    seg = A_cs[..., :, None] - A_cs[..., None, :]              # (b,h,nc,c,c)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bzlhn,bzshn->bhzls", Cc, Bc,
+                    preferred_element_type=jnp.float32)
+    M = (CB * L).astype(xdt.dtype)
+    y = jnp.einsum("bhzls,bzshp->bzlhp", M, xc,
+                   preferred_element_type=jnp.float32)
+
+    # 2. per-chunk end states
+    decay_to_end = jnp.exp(A_cs[..., -1:] - A_cs)              # (b,h,nc,c)
+    states = jnp.einsum("bzlhn,bhzl,bzlhp->bzhpn", Bc, decay_to_end, xc,
+                        preferred_element_type=jnp.float32)
+
+    # 3. inter-chunk recurrence (linear scan over chunks)
+    chunk_decay = jnp.exp(A_cs[..., -1]).transpose(0, 2, 1)    # (b,nc,h)
+
+    def step(S, inp):
+        st_z, dec_z = inp                       # (b,h,p,n), (b,h)
+        out = S                                 # state entering this chunk
+        S = S * dec_z[..., None, None] + st_z
+        return S, out
+
+    S0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, S_in = jax.lax.scan(step, S0,
+                           (states.transpose(1, 0, 2, 3, 4),
+                            chunk_decay.transpose(1, 0, 2)))
+    S_in = S_in.transpose(1, 0, 2, 3, 4)        # (b,nc,h,p,n)
+
+    # 4. state → output within chunk
+    decay_from_start = jnp.exp(A_cs).transpose(0, 2, 3, 1)     # (b,nc,c,h)
+    y_off = jnp.einsum("bzlhn,bzhpn,bzlh->bzlhp",
+                       Cc, S_in.astype(jnp.float32), decay_from_start,
+                       preferred_element_type=jnp.float32)
+    return (y + y_off).reshape(b, l, h, p)
+
+
+def _project(params, x, cfg):
+    di, g, n, h, p = _dims(cfg)
+    dt_ = x.dtype
+    zxbcdt = jnp.einsum("bld,de->ble", x, params["in_proj"].astype(dt_))
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    return z, xBC, dt
+
+
+def _split_xbc(xBC, cfg):
+    di, g, n, h, p = _dims(cfg)
+    b, l = xBC.shape[:2]
+    xs, B, C = jnp.split(xBC, [di, di + g * n], axis=-1)
+    xs = xs.reshape(b, l, h, p)
+    B = jnp.repeat(B.reshape(b, l, g, n), h // g, axis=2)
+    C = jnp.repeat(C.reshape(b, l, g, n), h // g, axis=2)
+    return xs, B, C
+
+
+def _finish(params, y, z, cfg):
+    b, l = y.shape[:2]
+    di = cfg.d_inner
+    y = y.reshape(b, l, di).astype(z.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    return jnp.einsum("ble,ed->bld", y, params["out_proj"].astype(y.dtype))
+
+
+def mamba_apply(params, x, cfg):
+    """Full-sequence SSD mixer: ``x[(b, l, d)]`` → ``(b, l, d)``."""
+    di, g, n, h, p = _dims(cfg)
+    z, xBC, dt = _project(params, x, cfg)
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"].astype(x.dtype),
+                                   params["conv_b"].astype(x.dtype)))
+    xs, B, C = _split_xbc(xBC, cfg)
+    # Shard SSD head dim over the model axis: the intra-chunk L/CB tensors
+    # are O(b·h·l·chunk) and dominate activation memory if replicated.
+    xs = shard(xs, "batch", "seq", "act_heads", None)
+    B = shard(B, "batch", "seq", "act_heads", None)
+    C = shard(C, "batch", "seq", "act_heads", None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    dt = shard(dt, "batch", "seq", "act_heads")
+    A = -jnp.exp(params["A_log"])                     # (h,)
+    y = _ssd_chunked(xs.astype(jnp.float32) * dt[..., None],
+                     dt * A[None, None, :], B.astype(jnp.float32),
+                     C.astype(jnp.float32), cfg.ssm_chunk)
+    y = shard(y, "batch", "seq", "act_heads", None)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    return _finish(params, y.astype(x.dtype), z, cfg)
+
+
+def mamba_cache_shape(cfg, batch: int):
+    di, g, n, h, p = _dims(cfg)
+    conv_ch = di + 2 * g * n
+    return {
+        "conv": (batch, cfg.d_conv - 1, conv_ch),
+        "ssd": (batch, h, p, n),
+    }
+
+
+def mamba_decode(params, x, cache, cfg):
+    """One-token step: ``x[(b, 1, d)]``, cache {conv, ssd} → (y, cache')."""
+    di, g, n, h, p = _dims(cfg)
+    z, xBC, dt = _project(params, x, cfg)
+    # conv over (state ++ new)
+    window = jnp.concatenate([cache["conv"], xBC], axis=1)   # (b, dc, ch)
+    w = params["conv_w"].astype(x.dtype)
+    conv_out = jnp.einsum("btc,tc->bc", window, w) \
+        + params["conv_b"].astype(x.dtype)
+    xBC1 = jax.nn.silu(conv_out)[:, None, :]
+    xs, B, C = _split_xbc(xBC1, cfg)                          # (b,1,h,·)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])[:, 0]   # (b,h)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A[None, :])                             # (b,h)
+    xdt = xs[:, 0].astype(jnp.float32) * dt[..., None]        # (b,h,p)
+    S = cache["ssd"] * dA[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xdt, B[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", C[:, 0].astype(jnp.float32), S)
+    y = y + params["D"][None, :, None] * xs[:, 0].astype(jnp.float32)
+    out = _finish(params, y[:, None].astype(x.dtype), z, cfg)
+    return out, {"conv": window[:, 1:], "ssd": S}

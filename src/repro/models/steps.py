@@ -1,0 +1,257 @@
+"""Step functions: loss, train_step, prefill_step, decode_step + input specs.
+
+The factories close over (cfg, mesh, rules) and return pure jittable
+functions; ``input_specs``/``state_specs`` return sharded
+``ShapeDtypeStruct`` trees so the multi-pod dry-run lowers every
+(arch × shape × mesh) cell without allocating a single real buffer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from . import model as model_lib
+from .params import (ParamSpec, abstract_params, logical_to_spec,
+                     tree_shardings)
+from .sharding import default_rules, long_context_rules, use_mesh_rules
+from .. import optim as optim_lib
+from ..configs.common import ArchConfig, ShapeSpec
+
+__all__ = [
+    "loss_fn", "make_train_step", "make_prefill_step", "make_decode_step",
+    "input_specs", "train_state_specs", "rules_for", "batch_sharding",
+    "abstract_cache", "MEM_LEN_DIV",
+]
+
+# enc-dec / vlm memory length relative to seq (documented in DESIGN.md):
+# train splits seq 50/50 between source and target; decode shapes use
+# seq/8 source frames (speech prompt) and n_img_tokens patches for vlm.
+MEM_LEN_DIV = {"train": 2, "prefill": 2, "decode": 8}
+
+
+def rules_for(shape: ShapeSpec, cfg: ArchConfig | None = None):
+    """Sharding rules per input shape.
+
+    Serving (prefill/decode) replicates parameters over the data axes when
+    they fit (ZeRO-3 FSDP at inference would all-gather every parameter on
+    EVERY decode step — measured as the dominant collective term in the
+    baseline sweep, §Perf iteration S1). Models too big for 16-way model
+    sharding (jamba-398B, llama4-scout) keep FSDP and the gather cost is
+    the documented price of their size.
+    """
+    if shape.name == "long_500k":
+        rules = long_context_rules()
+    else:
+        rules = default_rules()
+    if cfg is not None and shape.kind in ("prefill", "decode"):
+        per_chip = cfg.param_count() * np.dtype(cfg.param_dtype).itemsize / 16
+        if per_chip <= 9e9:
+            rules["embed"] = None      # replicate over data/pod for serving
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ArchConfig, params, batch, *, z_loss: float = 1e-4,
+            moe_coef: float = 0.01):
+    logits, aux = model_lib.forward(
+        cfg, params, batch["tokens"], frames=batch.get("frames"),
+        img=batch.get("img"))
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    # Mask vocab padding columns (vocab_padded > vocab).
+    vmask = jnp.arange(logits.shape[-1]) < cfg.vocab
+    logits = jnp.where(vmask[None, None, :], logits, -1e30)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = ((lse - ll) * mask).sum() / denom
+    zl = z_loss * ((lse ** 2) * mask).sum() / denom
+    total = ce + zl + moe_coef * aux["moe_aux"]
+    return total, {"ce": ce, "z_loss": zl, "moe_aux": aux["moe_aux"]}
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, optimizer: optim_lib.Optimizer,
+                    mesh: Mesh | None = None, rules=None,
+                    clip_norm: float = 1.0, grad_accum: int = 1,
+                    param_shardings=None):
+    """``grad_accum > 1`` scans over microbatches, accumulating gradients —
+    the standard way to keep activation memory inside the HBM budget at
+    global-batch 256 (the dry-run's fits-in-16GB proof uses this).
+
+    The micro body is itself rematerialized — without this the
+    accumulation scan's backward saves EVERY microbatch's residuals at
+    once and defeats the purpose. ``param_shardings`` (optional pytree)
+    pins the fp32 gradient accumulator to the parameters' layout so it
+    never replicates.
+    """
+    rules = rules or default_rules()
+
+    def _shard_batch_leaf(x):
+        from .sharding import shard as _shard
+        return _shard(x, "batch", *([None] * (x.ndim - 1)))
+
+    def _pin(tree):
+        if param_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            param_shardings)
+
+    def train_step(state, batch):
+        with use_mesh_rules(mesh, rules):
+            grad_fn = jax.value_and_grad(
+                lambda p, b: loss_fn(cfg, p, b), has_aux=True)
+            if grad_accum == 1:
+                (loss, metrics), grads = grad_fn(state["params"], batch)
+            else:
+                k = grad_accum
+                mb = jax.tree.map(
+                    lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]),
+                    batch)
+
+                @functools.partial(
+                    jax.checkpoint,
+                    policy=jax.checkpoint_policies.nothing_saveable)
+                def micro(carry, b):
+                    gsum, lsum, msum = carry
+                    b = jax.tree.map(_shard_batch_leaf, b)
+                    (l, m), g = grad_fn(state["params"], b)
+                    gsum = _pin(jax.tree.map(
+                        lambda a, x: a + x.astype(a.dtype), gsum, g))
+                    msum = jax.tree.map(lambda a, x: a + x, msum, m)
+                    return (gsum, lsum + l, msum), None
+
+                acc_dtype = jnp.dtype(cfg.grad_accum_dtype)
+                g0 = _pin(jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, acc_dtype),
+                    state["params"]))
+                m0 = {"ce": 0.0, "z_loss": 0.0, "moe_aux": 0.0}
+                m0 = jax.tree.map(jnp.float32, m0)
+                (gsum, lsum, msum), _ = jax.lax.scan(
+                    micro, (g0, jnp.float32(0.0), m0), mb)
+                grads = jax.tree.map(lambda g: g / k, gsum)
+                loss = lsum / k
+                metrics = jax.tree.map(lambda x: x / k, msum)
+            grads, gnorm = optim_lib.clip_by_global_norm(grads, clip_norm)
+            params, opt_state = optimizer.update(
+                grads, state["opt"], state["params"])
+            new_state = {"params": params, "opt": opt_state,
+                         "step": state["step"] + 1}
+            metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+            return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, mesh: Mesh | None = None, rules=None):
+    rules = rules or default_rules()
+
+    def prefill_step(params, batch):
+        with use_mesh_rules(mesh, rules):
+            return model_lib.prefill(
+                cfg, params, batch["tokens"], frames=batch.get("frames"),
+                img=batch.get("img"))
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, mesh: Mesh | None = None, rules=None):
+    rules = rules or default_rules()
+
+    def decode_step(params, cache, token, pos):
+        with use_mesh_rules(mesh, rules):
+            return model_lib.decode_step(cfg, params, cache, token, pos)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract specs (dry-run: zero allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, axes, mesh, rules):
+    sharding = None
+    if mesh is not None:
+        sharding = NamedSharding(mesh, logical_to_spec(axes, rules, mesh))
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_sharding(mesh, rules):
+    return NamedSharding(mesh, logical_to_spec(("batch", "seq"), rules, mesh))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh | None = None,
+                rules=None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    rules = rules or rules_for(shape)
+    B, L = shape.global_batch, shape.seq_len
+    mem_div = MEM_LEN_DIV[shape.kind]
+    d_front = cfg.d_frontend or cfg.d_model
+    tok = functools.partial(_sds, dtype=jnp.int32, mesh=mesh, rules=rules)
+    emb = functools.partial(_sds, dtype=jnp.float32, mesh=mesh, rules=rules)
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            l_tgt = L // 2
+            batch = {
+                "frames": emb((B, L - l_tgt, d_front),
+                              axes=("batch", "seq", None)),
+                "tokens": tok((B, l_tgt), axes=("batch", "seq")),
+            }
+            if shape.kind == "train":
+                batch["labels"] = tok((B, l_tgt), axes=("batch", "seq"))
+        else:
+            batch = {"tokens": tok((B, L), axes=("batch", "seq"))}
+            if cfg.family == "vlm":
+                batch["img"] = emb((B, cfg.n_img_tokens, d_front),
+                                   axes=("batch", None, None))
+            if shape.kind == "train":
+                batch["labels"] = tok((B, L), axes=("batch", "seq"))
+        return batch
+
+    # decode: cache + one token
+    return {
+        "cache": abstract_cache(cfg, shape, mesh, rules),
+        "token": tok((B, 1), axes=("batch", None)),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def abstract_cache(cfg: ArchConfig, shape: ShapeSpec, mesh, rules) -> dict:
+    B, L = shape.global_batch, shape.seq_len
+    mem_len = (cfg.n_img_tokens if cfg.family == "vlm"
+               else L // MEM_LEN_DIV["decode"])
+    tree = model_lib.cache_specs(cfg, B, L, mem_len)
+
+    def leaf(entry):
+        shp, axes, dtype = entry
+        return _sds(shp, dtype, axes, mesh, rules)
+
+    return jax.tree.map(leaf, tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        len(x) == 3 and isinstance(x[0], tuple))
+
+
+def train_state_specs(cfg: ArchConfig, optimizer: optim_lib.Optimizer,
+                      mesh: Mesh | None = None, rules=None):
+    """Abstract sharded train state {params, opt, step} for .lower()."""
+    rules = rules or default_rules()
+    pspecs = model_lib.model_specs(cfg)
+    params = abstract_params(pspecs, mesh, rules)
+    opt = abstract_params(optimizer.state_specs(pspecs), mesh, rules)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    return {"params": params, "opt": opt, "step": step}

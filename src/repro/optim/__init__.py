@@ -1,0 +1,189 @@
+"""Optimizers (AdamW, Adafactor), LR schedules, global-norm clipping.
+
+Implemented from scratch (no optax dependency). Each optimizer exposes:
+  * ``init(params)``          — state pytree;
+  * ``update(grads, state, params)`` → ``(new_params, new_state)``;
+  * ``state_specs(param_specs)`` — ParamSpec tree for the state, so the
+    dry-run can build sharded abstract optimizer state without allocating
+    (a 398B model's Adam state is ~3TB — it must never touch host RAM).
+
+Adafactor (factored second moment, no momentum) is what the largest
+assigned configs (jamba-1.5-large-398b) use to fit the 16 GB/chip budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.params import ParamSpec
+
+__all__ = [
+    "Optimizer", "adamw", "adafactor", "cosine_schedule", "global_norm",
+    "clip_by_global_norm", "make_optimizer",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable          # (grads, state, params) -> (params, state)
+    state_specs: Callable     # (param_spec_tree) -> state spec tree
+
+
+def cosine_schedule(peak_lr: float = 3e-4, warmup: int = 100,
+                    total: int = 10_000, floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(1, warmup)
+        t = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), norm
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: Callable, *, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        cf = c.astype(jnp.float32)
+        lr_t = lr(c)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mh = m / (1 - b1 ** cf)
+            vh = v / (1 - b2 ** cf)
+            step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(
+                jnp.float32)
+            newp = p.astype(jnp.float32) - lr_t * step
+            return newp.astype(p.dtype), m.astype(state_dtype), \
+                v.astype(state_dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        newp = jax.tree.map(lambda t: t[0], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return newp, {"m": m, "v": v, "count": c}
+
+    def state_specs(param_specs):
+        as_state = lambda s: ParamSpec(s.shape, s.axes, init="zeros",
+                                       dtype=state_dtype)
+        return {"m": jax.tree.map(as_state, param_specs, is_leaf=_is_spec),
+                "v": jax.tree.map(as_state, param_specs, is_leaf=_is_spec),
+                "count": ParamSpec((), (), init="zeros", dtype=jnp.int32)}
+
+    return Optimizer(init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored v, no momentum)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr: Callable, *, decay=0.8, eps=1e-30, clip_thresh=1.0,
+              weight_decay=0.0) -> Optimizer:
+    def factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def per(p):
+            if factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(per, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        cf = c.astype(jnp.float32)
+        beta = 1.0 - cf ** (-decay)
+        lr_t = lr(c)
+
+        def upd(g, vdict, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if factored(g.shape):
+                vr = beta * vdict["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * vdict["vc"] + (1 - beta) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1, keepdims=True)[..., None],
+                                       eps))
+                u = g32 / jnp.sqrt(jnp.maximum(denom, eps))
+                nv = {"vr": vr, "vc": vc}
+            else:
+                v = beta * vdict["v"] + (1 - beta) * g2
+                u = g32 / jnp.sqrt(jnp.maximum(v, eps))
+                nv = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_thresh)
+            newp = p.astype(jnp.float32) - lr_t * (
+                u + weight_decay * p.astype(jnp.float32))
+            return newp.astype(p.dtype), nv
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        outs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        newp = tdef.unflatten([o[0] for o in outs])
+        newv = tdef.unflatten([o[1] for o in outs])
+        return newp, {"v": newv, "count": c}
+
+    def state_specs(param_specs):
+        def per(s: ParamSpec):
+            if factored(s.shape):
+                return {"vr": ParamSpec(s.shape[:-1], s.axes[:-1],
+                                        init="zeros", dtype=jnp.float32),
+                        "vc": ParamSpec(s.shape[:-2] + s.shape[-1:],
+                                        s.axes[:-2] + s.axes[-1:],
+                                        init="zeros", dtype=jnp.float32)}
+            return {"v": ParamSpec(s.shape, s.axes, init="zeros",
+                                   dtype=jnp.float32)}
+        return {"v": jax.tree.map(per, param_specs, is_leaf=_is_spec),
+                "count": ParamSpec((), (), init="zeros", dtype=jnp.int32)}
+
+    return Optimizer(init, update, state_specs)
+
+
+def make_optimizer(name: str, lr: Callable | None = None, **kw) -> Optimizer:
+    lr = lr or cosine_schedule()
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

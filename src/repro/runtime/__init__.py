@@ -1,0 +1,3 @@
+from .fault_tolerance import TrainLoopRunner, StragglerMonitor
+
+__all__ = ["TrainLoopRunner", "StragglerMonitor"]

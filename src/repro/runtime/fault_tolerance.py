@@ -1,0 +1,118 @@
+"""Fault-tolerant training-loop runner + straggler monitoring.
+
+The runner wraps a pure ``train_step`` with the operational loop a
+1000+-node job needs:
+
+* periodic atomic checkpoints + auto-resume (CheckpointManager);
+* bounded retry on transient step failures (device OOM/interconnect hiccup
+  → re-materialize state from the last checkpoint and replay data);
+* straggler detection: per-step wall-time EWMA; a step slower than
+  ``threshold×`` the EWMA is logged (on TPU pods the mitigation is
+  re-scheduling the slow host; with the paper's static LPT load balance the
+  compute itself cannot skew, so stragglers are infrastructural);
+* preemption hooks: SIGTERM triggers a final checkpoint before exit.
+
+Elastic scaling: state is saved unsharded and restored with *current*-mesh
+shardings; the deterministic data pipeline (`repro.data`) is keyed by step,
+so a job resumed on a different topology replays an identical stream.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Any, Callable, Iterator
+
+from ..checkpoint import CheckpointManager
+
+__all__ = ["StragglerMonitor", "TrainLoopRunner"]
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.0, alpha: float = 0.1):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.ewma: float | None = None
+        self.events: list[tuple[int, float, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        straggler = False
+        if self.ewma is not None and dt > self.threshold * self.ewma:
+            self.events.append((step, dt, self.ewma))
+            straggler = True
+        self.ewma = dt if self.ewma is None else \
+            (1 - self.alpha) * self.ewma + self.alpha * dt
+        return straggler
+
+
+class TrainLoopRunner:
+    def __init__(self, train_step: Callable, ckpt: CheckpointManager, *,
+                 ckpt_every: int = 50, max_retries: int = 2,
+                 log_every: int = 10, log_fn: Callable = print):
+        self.train_step = train_step
+        self.ckpt = ckpt
+        self.ckpt_every = ckpt_every
+        self.max_retries = max_retries
+        self.log_every = log_every
+        self.log = log_fn
+        self.monitor = StragglerMonitor()
+        self._preempted = False
+
+    def _install_sigterm(self):
+        def handler(signum, frame):
+            self._preempted = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # non-main thread (tests)
+
+    def resume_or(self, state_template, shardings=None):
+        """Restore the latest checkpoint or return the template as-is."""
+        restored, step = self.ckpt.restore(state_template, shardings=shardings)
+        if restored is None:
+            return state_template, 0
+        self.log(f"[runner] resumed from step {step}")
+        return restored, int(step)
+
+    def run(self, state, batches: Iterator, num_steps: int,
+            start_step: int = 0) -> tuple[Any, list[dict]]:
+        self._install_sigterm()
+        history: list[dict] = []
+        last_good = state
+        retries = 0
+        step = start_step
+        it = iter(batches)
+        while step < num_steps and not self._preempted:
+            data_step, batch = next(it)
+            assert data_step == step, (data_step, step)
+            t0 = time.perf_counter()
+            try:
+                state, metrics = self.train_step(state, batch)
+                loss = float(metrics["loss"])
+                if loss != loss:           # NaN: treat as step failure
+                    raise FloatingPointError(f"NaN loss at step {step}")
+            except Exception as e:          # noqa: BLE001 — retry path
+                retries += 1
+                self.log(f"[runner] step {step} failed ({e!r}); "
+                         f"retry {retries}/{self.max_retries}")
+                if retries > self.max_retries:
+                    raise
+                state = last_good            # roll back and replay
+                it = iter(batches)           # caller passes resumable iter
+                continue
+            dt = time.perf_counter() - t0
+            if self.monitor.observe(step, dt):
+                self.log(f"[runner] straggler: step {step} took {dt:.3f}s "
+                         f"(ewma {self.monitor.ewma:.3f}s)")
+            history.append({"step": step, "loss": loss, "time_s": dt})
+            if step % self.log_every == 0:
+                self.log(f"[runner] step {step} loss {loss:.4f} "
+                         f"{dt*1e3:.1f} ms")
+            if self.ckpt_every and step and step % self.ckpt_every == 0:
+                self.ckpt.save(step, state)
+                last_good = state
+                retries = 0
+            step += 1
+        if self._preempted:
+            self.log(f"[runner] SIGTERM — checkpointing step {step}")
+            self.ckpt.save(step, state)
+        return state, history

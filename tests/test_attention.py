@@ -1,0 +1,95 @@
+"""flash_attention / decode_attention vs. naive softmax reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import decode_attention, flash_attention
+
+
+def naive(q, k, v, mode, window, pos_q, pos_k):
+    b, lq, h, dh = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qr = q.reshape(b, lq, kh, g, dh)
+    s = np.einsum("bqkgd,bskd->bkgqs", qr, k) / np.sqrt(dh)
+    pq = pos_q[:, None, None, :, None]
+    pk = pos_k[:, None, None, None, :]
+    if mode == "full":
+        m = np.ones_like(s, bool)
+    else:
+        m = pk <= pq
+        if mode == "local" and window:
+            m = m & ((pq // window) == (pk // window))
+    s = np.where(m, s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = np.einsum("bkgqs,bskd->bqkgd", p, v)
+    return out.reshape(b, lq, h, dh)
+
+
+@pytest.mark.parametrize("mode,window", [("causal", 0), ("full", 0),
+                                         ("local", 8)])
+@pytest.mark.parametrize("h,kh", [(4, 4), (8, 2)])
+def test_flash_matches_naive(mode, window, h, kh):
+    rng = np.random.default_rng(0)
+    b, lq, lk, dh = 2, 32, 32, 16
+    q = rng.standard_normal((b, lq, h, dh)).astype(np.float32)
+    k = rng.standard_normal((b, lk, kh, dh)).astype(np.float32)
+    v = rng.standard_normal((b, lk, kh, dh)).astype(np.float32)
+    pos = np.broadcast_to(np.arange(lq, dtype=np.int32), (b, lq)).copy()
+    out = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                          pos_q=jnp.asarray(pos), pos_k=jnp.asarray(pos),
+                          mode=mode, window=window, q_chunk=8, kv_chunk=8)
+    ref = naive(q, k, v, mode, window, pos, pos)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_chunk_invariance():
+    rng = np.random.default_rng(1)
+    b, l, h, dh = 1, 64, 4, 8
+    q = rng.standard_normal((b, l, h, dh)).astype(np.float32)
+    k = rng.standard_normal((b, l, h, dh)).astype(np.float32)
+    v = rng.standard_normal((b, l, h, dh)).astype(np.float32)
+    pos = np.arange(l, dtype=np.int32)[None]
+    outs = []
+    for qc, kc in [(8, 8), (16, 32), (64, 64)]:
+        outs.append(np.asarray(flash_attention(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+            pos_q=jnp.asarray(pos), pos_k=jnp.asarray(pos),
+            mode="causal", q_chunk=qc, kv_chunk=kc)))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-5, atol=1e-5)
+
+
+def test_decode_matches_flash_last_position():
+    rng = np.random.default_rng(2)
+    b, S, h, kh, dh = 2, 16, 4, 2, 8
+    q_full = rng.standard_normal((b, S, h, dh)).astype(np.float32)
+    k = rng.standard_normal((b, S, kh, dh)).astype(np.float32)
+    v = rng.standard_normal((b, S, kh, dh)).astype(np.float32)
+    pos = np.broadcast_to(np.arange(S, dtype=np.int32), (b, S)).copy()
+    full = flash_attention(jnp.asarray(q_full), jnp.asarray(k),
+                           jnp.asarray(v), pos_q=jnp.asarray(pos),
+                           pos_k=jnp.asarray(pos), mode="causal",
+                           q_chunk=8, kv_chunk=8)
+    dec = decode_attention(jnp.asarray(q_full[:, -1:]), jnp.asarray(k),
+                           jnp.asarray(v), cur_pos=jnp.int32(S - 1))
+    np.testing.assert_allclose(np.asarray(dec)[:, 0],
+                               np.asarray(full)[:, -1], rtol=2e-4, atol=2e-4)
+
+
+def test_fully_masked_rows_are_finite():
+    """Local mode can mask an entire row for early chunks — no NaNs."""
+    rng = np.random.default_rng(3)
+    b, l, h, dh = 1, 16, 2, 8
+    q = rng.standard_normal((b, l, h, dh)).astype(np.float32)
+    k = rng.standard_normal((b, l, h, dh)).astype(np.float32)
+    v = rng.standard_normal((b, l, h, dh)).astype(np.float32)
+    pos_q = np.zeros((b, l), np.int32)         # everything before the keys
+    pos_k = np.full((b, l), 100, np.int32)
+    out = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                          pos_q=jnp.asarray(pos_q),
+                          pos_k=jnp.asarray(pos_k), mode="causal",
+                          q_chunk=8, kv_chunk=8)
+    assert np.all(np.isfinite(np.asarray(out)))

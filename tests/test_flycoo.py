@@ -1,0 +1,74 @@
+"""FLYCOO format invariants (paper §III)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.flycoo import build_flycoo, choose_partition_params, pack_mode
+from repro.core.tensors import frostt_like, random_sparse_tensor
+
+
+def small_tensor(seed=0, nnz=300):
+    return random_sparse_tensor((40, 30, 20), nnz, seed=seed,
+                                distribution="powerlaw")
+
+
+def test_partition_covers_every_nonzero_once_per_mode():
+    t = small_tensor()
+    ft = build_flycoo(t, 4, m_bounds=(4, 16), g_bounds=(8, 64))
+    for n in range(t.nmodes):
+        owner = ft.owner_of(n)
+        assert owner.shape == (t.nnz,)
+        assert owner.min() >= 0 and owner.max() < 4
+        # owners come from the super-shard of the output index
+        mp = ft.modes[n]
+        expect = mp.super_to_device[t.indices[:, n] // mp.m]
+        assert np.array_equal(owner, expect)
+
+
+def test_row_perm_is_permutation_and_device_major():
+    t = small_tensor()
+    ft = build_flycoo(t, 4, m_bounds=(4, 16), g_bounds=(8, 64))
+    for mp in ft.modes:
+        dim = t.shape[mp.mode]
+        assert sorted(mp.row_perm.tolist()) == sorted(
+            set(mp.row_perm.tolist()))
+        # round trip
+        assert np.array_equal(mp.row_unperm[mp.row_perm], np.arange(dim))
+        # device-major: each row's slot // rows_cap == its owner device
+        owner_of_row = mp.super_to_device[np.arange(dim) // mp.m]
+        assert np.array_equal(mp.row_perm // mp.rows_cap, owner_of_row)
+
+
+def test_pack_mode_sorted_and_complete():
+    t = small_tensor()
+    ft = build_flycoo(t, 4, m_bounds=(4, 16), g_bounds=(8, 64))
+    for n in range(t.nmodes):
+        idx, val, mask = pack_mode(ft, n)
+        assert mask.sum() == t.nnz
+        assert abs(val[mask].sum() - t.values.sum()) < 1e-3
+        for d in range(4):
+            rows = idx[d, mask[d], n]
+            assert np.all(np.diff(rows) >= 0)          # sorted by output row
+            assert np.all(rows // ft.modes[n].rows_cap == d)   # owned
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_partition_params_satisfy_eq2(seed):
+    rng = np.random.default_rng(seed)
+    shape = tuple(int(rng.integers(8, 5000)) for _ in range(3))
+    p = choose_partition_params(shape, nnz=100_000, num_workers=8)
+    for dim, m in zip(shape, p.m):
+        k = -(-dim // m)
+        # Eq.2: super-shard count ≥ workers (divisible up to the ragged tail)
+        assert k >= 1
+        if dim > 8:
+            assert k >= 8 or m == 1
+
+
+def test_frostt_profiles_build():
+    for name in ("nell-2", "vast"):
+        t = frostt_like(name, scale=0.02)
+        ft = build_flycoo(t, 4)
+        assert ft.nnz == t.nnz
+        assert ft.params.g >= 1

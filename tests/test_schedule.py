@@ -1,0 +1,67 @@
+"""Paper Alg. 3 (LPT greedy scheduling): Graham 4/3 bound + baselines."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedule import (block_cyclic_schedule, load_imbalance,
+                                 lpt_schedule, makespan)
+
+
+def brute_force_opt(sizes, bins):
+    best = float("inf")
+    for assign in itertools.product(range(bins), repeat=len(sizes)):
+        loads = np.zeros(bins)
+        for s, b in zip(sizes, assign):
+            loads[b] += s
+        best = min(best, loads.max())
+    return best
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 50), min_size=1, max_size=7),
+       st.integers(2, 3))
+def test_lpt_within_4_3_of_optimal(sizes, bins):
+    sizes = np.array(sizes)
+    assign = lpt_schedule(sizes, bins)
+    got = makespan(sizes, assign, bins)
+    opt = brute_force_opt(list(sizes), bins)
+    assert got <= 4 / 3 * opt + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 10_000), min_size=1, max_size=200),
+       st.integers(2, 56))
+def test_lpt_assigns_everything_and_beats_mean_bound(sizes, bins):
+    sizes = np.array(sizes)
+    assign = lpt_schedule(sizes, bins)
+    assert assign.shape == (len(sizes),)
+    assert assign.min() >= 0 and assign.max() < bins
+    # Graham: makespan <= mean + max (another classical bound)
+    got = makespan(sizes, assign, bins)
+    assert got <= sizes.sum() / bins + sizes.max() + 1e-9
+
+
+def test_lpt_beats_block_cyclic_on_skewed_load():
+    """Paper Fig. 6: LPT vs block-cyclic on power-law super-shard sizes.
+
+    Skew is capped so no single super-shard exceeds the mean bin load
+    (matching FLYCOO preprocessing, where m_n bounds a super-shard's row
+    interval); with one unboundedly-huge shard no schedule can balance.
+    """
+    rng = np.random.default_rng(0)
+    sizes = (1000 * (1 + rng.pareto(2.0, size=512))).astype(np.int64)
+    bins = 56
+    sizes = np.minimum(sizes, sizes.sum() // bins)     # cap at mean load
+    lpt = load_imbalance(sizes, lpt_schedule(sizes, bins), bins)
+    cyc = load_imbalance(sizes, block_cyclic_schedule(len(sizes), bins), bins)
+    assert lpt <= cyc
+    assert lpt < 1.35          # LPT is near-balanced on capped-pareto sizes
+
+
+def test_lpt_deterministic():
+    sizes = np.array([5, 3, 3, 2, 8, 1])
+    a = lpt_schedule(sizes, 3)
+    b = lpt_schedule(sizes, 3)
+    assert np.array_equal(a, b)
