@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.core.tensors import frostt_like
 
-BENCH_TENSORS = ("nell-2", "nell-1", "flickr", "delicious", "vast")
+BENCH_TENSORS = ("nell-2", "nell-1", "flickr", "delicious", "vast", "enron")
 
 
 def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from ..compat import shard_map as _shard_map
 from . import distributed as dist
 from .flycoo import FlycooTensor
 from .mttkrp import mttkrp as mttkrp_jax
@@ -132,6 +133,12 @@ def make_als_sweep(rt: dist.DynasorRuntime, mesh: Mesh, *,
                    backend: str = "segsum") -> Callable:
     """One full distributed ALS sweep (all modes, with dynamic remapping).
 
+    ``backend`` is the per-device MTTKRP engine: ``segsum`` (plain XLA),
+    ``ref``, ``pallas`` (materialized contrib), ``pallas_fused`` (N-mode
+    fused gather–Hadamard–scatter — works for any tensor order), or
+    ``auto`` (dispatch on mode count / rank padding / VMEM budget; see
+    ``kernels.mttkrp.ops.select_backend``).
+
     Returned jitted fn:
       ``(idx, val, mask, factors, lam, sweep0) ->
         (idx', val', mask', factors', lam', fit_parts)``
@@ -183,13 +190,12 @@ def make_als_sweep(rt: dist.DynasorRuntime, mesh: Mesh, *,
 
     from jax.sharding import PartitionSpec as P
     spec_t, spec_r = P(dist.AXIS), P()
-    shmapped = jax.shard_map(
+    shmapped = _shard_map(
         inner, mesh=mesh,
         in_specs=(spec_t, spec_t, spec_t, spec_t)
         + (spec_r,) * (rt.nmodes + 2),
         out_specs=((spec_t, spec_t, spec_t), [spec_r] * rt.nmodes, spec_r,
                    spec_r),
-        check_vma=False,
     )
     return jax.jit(shmapped)
 
@@ -198,7 +204,12 @@ def cp_als_distributed(ft: FlycooTensor, rank: int, mesh: Mesh, *,
                        iters: int = 10, seed: int = 0, tol: float = 1e-5,
                        backend: str = "segsum",
                        tile_rows: int = 8) -> CPResult:
-    """Distributed CP-ALS: FLYCOO layout + Dynasor sweeps on ``mesh``."""
+    """Distributed CP-ALS: FLYCOO layout + Dynasor sweeps on ``mesh``.
+
+    Works for tensors of any order: with ``backend="pallas_fused"`` (or
+    ``"auto"``) every mode of a 3-/4-/5-mode decomposition runs the fused
+    N-mode Pallas kernel end-to-end.
+    """
     rt, (idx, val, mask) = dist.prepare_runtime(ft, rank, tile_rows=tile_rows)
     factors = [jnp.asarray(f) for f in dist.init_factors(ft, rt, seed=seed)]
     lam = jnp.ones((rank,), jnp.float32)

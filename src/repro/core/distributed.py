@@ -7,7 +7,8 @@ This is Alg. 2 (Dynasor) on a JAX device mesh:
     FLYCOO row permutation, see ``core.flycoo``);
   * the per-device mode step is gather → Hadamard → segment-scatter
     (``ref``/``segsum`` backends) or the Pallas blocked kernel
-    (``pallas``/``pallas_fused``);
+    (``pallas`` materialized / ``pallas_fused`` N-mode fused / ``auto``
+    dispatch — see the backend matrix in ``kernels.mttkrp.ops``);
   * **owner-computes means the output factor needs no psum** — only an
     all_gather to re-replicate it for later modes (on CPU this was "write
     once to shared DRAM");
@@ -35,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map as _shard_map
 from . import remap as remap_lib
 from .flycoo import FlycooTensor, pack_mode
 from ..kernels.mttkrp import ops as kops
@@ -156,9 +158,13 @@ def _unpack_payload(payload, nmodes):
 def device_mttkrp(idx, val, mask, factors, mode: int, rt: DynasorRuntime,
                   backend: str):
     """Owner-computes local MTTKRP for ``mode`` → (rows_cap, R) f32."""
+    if backend not in ("segsum", "pallas", "pallas_fused", "auto", "ref"):
+        raise ValueError(
+            f"unknown MTTKRP backend {backend!r}: expected 'segsum', "
+            "'pallas', 'pallas_fused', 'auto' or 'ref'")
     dev = jax.lax.axis_index(AXIS)
     rows_cap = rt.rows_cap[mode]
-    if backend in ("pallas", "pallas_fused", "ref"):
+    if backend in ("pallas", "pallas_fused", "auto", "ref"):
         return kops.mttkrp_device_step(
             idx, val, mask, factors, mode=mode, rows_cap=rows_cap,
             row_offset=dev * rows_cap, blk=rt.blk, tile_rows=rt.tile_rows,
@@ -259,12 +265,11 @@ def make_spmttkrp_all_modes(
 
     spec_t = P(AXIS)
     spec_r = P()
-    shmapped = jax.shard_map(
+    shmapped = _shard_map(
         inner, mesh=mesh,
         in_specs=(spec_t, spec_t, spec_t) + (spec_r,) * rt.nmodes,
         out_specs=([spec_r] * rt.nmodes, (spec_t, spec_t, spec_t),
                    {"dropped": spec_r}),
-        check_vma=False,
     )
     return jax.jit(shmapped)
 
@@ -288,11 +293,10 @@ def make_baseline_all_modes(rt: DynasorRuntime, mesh: Mesh) -> Callable:
 
     spec_t = P(AXIS)
     spec_r = P()
-    shmapped = jax.shard_map(
+    shmapped = _shard_map(
         inner, mesh=mesh,
         in_specs=(spec_t, spec_t, spec_t) + (spec_r,) * rt.nmodes,
         out_specs=[spec_r] * rt.nmodes,
-        check_vma=False,
     )
     return jax.jit(shmapped)
 

@@ -38,7 +38,20 @@ __all__ = [
     "choose_partition_params",
     "build_flycoo",
     "pack_mode",
+    "gather_operand_bytes",
 ]
+
+
+def gather_operand_bytes(nmodes: int, rank: int, g: int,
+                         itemsize: int = 4) -> int:
+    """Bytes of gathered input-factor rows one shard holds resident.
+
+    The N-mode fused kernel streams N−1 gathered ``(g, R)`` factor-row
+    blocks into VMEM per shard (``kernels.mttkrp.kernel.fused_mttkrp_nmode``)
+    instead of one materialized contrib block — this is the extra working-set
+    term Eq. 3 must carry when the fused path is enabled.
+    """
+    return (nmodes - 1) * g * rank * itemsize
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +130,7 @@ def choose_partition_params(
     m_bounds: tuple[int, int] = (1000, 16000),
     g_bounds: tuple[int, int] = (1024, 32768),
     itemsize: int = 4,
+    fused_gather: bool = False,
 ) -> PartitionParams:
     """Pick ``m_n`` and ``g`` per paper Eq. 2 & 3.
 
@@ -125,12 +139,19 @@ def choose_partition_params(
     (output rows + one shard per worker + remap pointers) fits the cache
     budget. α = factor-row bytes, β = nonzero bytes, σ = pointer bytes.
 
+    ``fused_gather=True`` targets the N-mode fused kernel: β additionally
+    carries the N−1 gathered input-factor rows per nonzero
+    (:func:`gather_operand_bytes` / g), shrinking ``g`` so the whole
+    gather-operand block set stays cache/VMEM-resident.
+
     On TPU ``cache_bytes`` is the per-device VMEM budget (≈128 MB on v5e is
     the paper-analogue "total cache"; pass 64 MiB for a single core's view).
     """
     nmodes = len(shape)
     alpha = rank * itemsize
     beta = nmodes * 4 + itemsize        # N int32 coords + value
+    if fused_gather:
+        beta += gather_operand_bytes(nmodes, rank, 1, itemsize)  # per nnz
     sigma = 8                           # remap pointer
     budget = theta * cache_bytes
 
@@ -233,12 +254,17 @@ def build_flycoo(
     schedule: str = "lpt",
     m_bounds: tuple[int, int] = (1000, 16000),
     g_bounds: tuple[int, int] = (1024, 32768),
+    fused_gather: bool = False,
 ) -> FlycooTensor:
-    """Preprocess ``t`` into FLYCOO format (paper §V-J stages 1–3)."""
+    """Preprocess ``t`` into FLYCOO format (paper §V-J stages 1–3).
+
+    ``fused_gather=True`` sizes shards for the N-mode fused kernel's
+    gather-operand working set (see :func:`choose_partition_params`).
+    """
     if params is None:
         params = choose_partition_params(
             t.shape, t.nnz, num_workers, rank=rank, cache_bytes=cache_bytes,
-            m_bounds=m_bounds, g_bounds=g_bounds,
+            m_bounds=m_bounds, g_bounds=g_bounds, fused_gather=fused_gather,
         )
     modes = [
         _build_mode(t, n, params.m[n], params.g, num_workers, schedule)

@@ -8,6 +8,9 @@ Three tiers, each validated against the previous:
      output rows. This is the pure-jnp oracle for the Pallas kernel.
   3. ``repro.kernels.mttkrp.ops.mttkrp_blocked`` — the Pallas TPU kernel
      (shard = VMEM block; scatter = one-hot MXU matmul).
+  4. :func:`mttkrp_fused` — single-device convenience over the N-mode fused
+     Pallas path (``ops.mttkrp_device_step``): sorts the stream by output
+     row and dispatches through the backend matrix (``auto`` by default).
 """
 from __future__ import annotations
 
@@ -17,11 +20,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.mttkrp import ops as _kops
+
 __all__ = [
     "mttkrp_elementwise_ref",
     "hadamard_rows",
     "mttkrp",
     "mttkrp_sorted",
+    "mttkrp_fused",
 ]
 
 
@@ -81,3 +87,31 @@ def mttkrp_sorted(indices, values, factors, mode: int, out_rows: int,
         ell, indices[:, mode], num_segments=out_rows,
         indices_are_sorted=indices_sorted,
     )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "out_rows", "blk", "tile_rows", "backend",
+                     "interpret"),
+)
+def mttkrp_fused(indices, values, factors, mode: int, out_rows: int, *,
+                 blk: int = 512, tile_rows: int = 128,
+                 backend: str = "auto", interpret: bool = True):
+    """Single-device spMTTKRP through the fused N-mode Pallas path.
+
+    Sorts the nonzero stream by output row (the FLYCOO precondition), pads
+    the output to a whole number of row tiles, and dispatches through
+    ``ops.mttkrp_device_step``'s backend matrix — ``auto`` picks fused vs.
+    materialized vs. ref from mode count, rank padding and VMEM budget.
+    """
+    order = jnp.argsort(indices[:, mode], stable=True)
+    idx = jnp.take(indices, order, axis=0).astype(jnp.int32)
+    val = jnp.take(values, order)
+    valid = jnp.ones(val.shape, bool)
+    rows_cap = -(-out_rows // tile_rows) * tile_rows
+    out = _kops.mttkrp_device_step(
+        idx, val, valid, list(factors), mode=mode, rows_cap=rows_cap,
+        row_offset=0, blk=blk, tile_rows=tile_rows, interpret=interpret,
+        backend=backend,
+    )
+    return out[:out_rows]

@@ -25,11 +25,31 @@ from .flycoo import FlycooTensor
 
 __all__ = [
     "remap_capacity",
+    "remap_capacities",
     "bucket_by_destination",
     "exchange",
     "compact_sorted",
     "remap_local",
 ]
+
+
+def remap_capacities(ft: FlycooTensor) -> list[int]:
+    """Per-transition max (src, dst) exchange sizes, mode n → n+1 (cyclic).
+
+    One entry per mode transition of the N-mode ALS cycle — the exact
+    all_to_all payload bound each remap pays. ``remap_capacity`` (the max)
+    sizes the static double buffer; the per-transition values feed the
+    traffic accounting in ``benchmarks.bench_remap_traffic``.
+    """
+    D = ft.params.num_workers
+    caps = []
+    for n in range(ft.nmodes):
+        nxt = (n + 1) % ft.nmodes
+        src = ft.owner_of(n).astype(np.int64)
+        dst = ft.owner_of(nxt).astype(np.int64)
+        counts = np.bincount(src * D + dst, minlength=D * D)
+        caps.append(max(1, int(counts.max())))
+    return caps
 
 
 def remap_capacity(ft: FlycooTensor) -> int:
@@ -38,15 +58,7 @@ def remap_capacity(ft: FlycooTensor) -> int:
     Static upper bound for the all_to_all buckets, computed at preprocessing
     (the paper's shard-pointer metadata plays the same role).
     """
-    D = ft.params.num_workers
-    cap = 1
-    for n in range(ft.nmodes):
-        nxt = (n + 1) % ft.nmodes
-        src = ft.owner_of(n).astype(np.int64)
-        dst = ft.owner_of(nxt).astype(np.int64)
-        counts = np.bincount(src * D + dst, minlength=D * D)
-        cap = max(cap, int(counts.max()))
-    return cap
+    return max(remap_capacities(ft))
 
 
 def bucket_by_destination(dest, payload, num_devices: int, bucket_cap: int):

@@ -149,6 +149,14 @@ FROSTT_PROFILES: dict[str, dict] = {
     "delicious": dict(shape=(532_900, 17_300_000, 2_500_000, 1_400), nnz=140_100_000,
                       scaled_shape=(5329, 17300, 2500, 140), scaled_nnz=140_100,
                       distribution="powerlaw"),
+    # 4-mode FROSTT tensor (sender × receiver × word × date). Compact mode
+    # sizes make it the N-mode fused-kernel benchmark target: every mode is
+    # eligible for the fused gather-Hadamard-scatter path. Uniform indices:
+    # the scaled-down power-law generator dedups 4-mode tensors to almost
+    # nothing, and this tensor must keep its nnz to measure kernel traffic.
+    "enron": dict(shape=(6_066, 5_699, 244_268, 1_176), nnz=54_202_099,
+                  scaled_shape=(606, 569, 2442, 117), scaled_nnz=54_202,
+                  distribution="uniform"),
     "vast": dict(shape=(165_400, 11_400, 2, 100, 89), nnz=26_000_000,
                  scaled_shape=(16540, 1140, 2, 100, 89), scaled_nnz=26_000,
                  distribution="uniform"),

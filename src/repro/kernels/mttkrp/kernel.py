@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: blocked segmented MTTKRP accumulation.
+"""Pallas TPU kernels: blocked segmented MTTKRP accumulation.
 
 TPU-native adaptation of the paper's elementwise gather–Hadamard–scatter
 (Alg. 2 lines 13-25). The FLYCOO *shard* (``g`` nonzeros, cache-sized)
@@ -14,6 +14,25 @@ blocks are padded to never straddle a row tile (ops.py builds that layout),
 so the sequential TPU grid revisits each output tile over a contiguous run
 of blocks and accumulates in VMEM.
 
+Kernel matrix (see ops.py for the dispatch layer that picks between them):
+
+  ==========================  =============================================
+  kernel                      contract
+  ==========================  =============================================
+  ``segment_accumulate``      scatter-only: takes an HBM-materialized
+                              ``contrib (B×R)`` block per grid step. Pays
+                              2·R·4 B/nonzero of HBM traffic (write + read
+                              of ``contrib``) that the fused kernels avoid.
+  ``fused_mttkrp_nmode``      gather-Hadamard-scatter for **any** tensor
+                              order: takes N−1 gathered factor-row blocks
+                              and forms ``contrib = val ⊙ ⊙_w rows_w``
+                              entirely in VMEM (loop over input modes inside
+                              the kernel body). ``contrib`` never exists in
+                              HBM.
+  ``fused_mttkrp_3mode``      back-compat wrapper: the 3-mode (two input
+                              factors) special case of the N-mode kernel.
+  ==========================  =============================================
+
 Grid: one step per nonzero block. ``tile_of_block`` is scalar-prefetched and
 drives the output BlockSpec index_map. The output is zero-initialized via
 ``input_output_aliases`` (an aliased zeros operand), so empty tiles stay
@@ -28,7 +47,40 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["segment_accumulate", "fused_mttkrp_3mode"]
+__all__ = [
+    "segment_accumulate",
+    "fused_mttkrp_nmode",
+    "fused_mttkrp_3mode",
+    "fused_vmem_bytes",
+]
+
+
+def fused_vmem_bytes(num_in_modes: int, rank_padded: int, blk: int,
+                     tile_rows: int, itemsize: int = 4) -> int:
+    """VMEM working set of one ``fused_mttkrp_nmode`` grid step.
+
+    N−1 gathered factor-row blocks + the in-register ``contrib`` block +
+    the one-hot scatter matrix + the resident output tile + the scalar
+    streams (values, local rows). ops.py's ``auto`` dispatch compares this
+    against the per-core VMEM budget.
+    """
+    factor_blocks = num_in_modes * blk * rank_padded * itemsize
+    contrib_block = blk * rank_padded * itemsize
+    onehot = blk * tile_rows * itemsize
+    out_tile = tile_rows * rank_padded * itemsize
+    scalars = 2 * blk * itemsize
+    return factor_blocks + contrib_block + onehot + out_tile + scalars
+
+
+def _scatter_update(rows, contrib, tile_rows: int):
+    """One-hot MXU scatter: ``(T×B) @ (B×R)`` update for the output tile."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (rows.shape[0], tile_rows), 1)
+    onehot = (rows[:, None] == iota).astype(contrib.dtype)
+    return jax.lax.dot_general(
+        onehot, contrib,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
 
 
 @functools.partial(
@@ -90,37 +142,106 @@ def _accum_body_aliased(tile_ref, row_ref, contrib_ref, init_ref, out_ref,
                         *, tile_rows: int):
     """Aliased variant: out_ref starts as the (zeros) alias content."""
     del tile_ref, init_ref
-    rows = row_ref[...]
-    contrib = contrib_ref[...]
-    iota = jax.lax.broadcasted_iota(jnp.int32, (rows.shape[0], tile_rows), 1)
-    onehot = (rows[:, None] == iota).astype(contrib.dtype)
-    update = jax.lax.dot_general(
-        onehot, contrib,
-        dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
+    update = _scatter_update(row_ref[...], contrib_ref[...], tile_rows)
     out_ref[...] += update.astype(out_ref.dtype)
 
 
-def _fused_body(tile_ref, row_ref, val_ref, ra_ref, rb_ref, init_ref, out_ref,
-                *, tile_rows: int):
-    """Fused Hadamard (Alg. 2 lines 19-23) + scatter: contrib built in VMEM."""
+def _fused_nmode_body(*refs, tile_rows: int):
+    """Fused Hadamard (Alg. 2 lines 19-23) + scatter, any tensor order.
+
+    Ref layout (positional, after scalar prefetch): ``tile_ref, row_ref,
+    val_ref, rows_0 … rows_{K-1}, init_ref, out_ref`` where K = N−1 input
+    modes. ``contrib`` is built by looping ``contrib *= rows_w`` over the
+    gathered factor-row blocks — entirely in VMEM, never in HBM.
+    """
+    tile_ref, row_ref, val_ref = refs[0], refs[1], refs[2]
+    factor_refs = refs[3:-2]
+    init_ref, out_ref = refs[-2], refs[-1]
     del tile_ref, init_ref
     rows = row_ref[...]
-    contrib = (val_ref[...][:, None] * ra_ref[...] * rb_ref[...])
-    iota = jax.lax.broadcasted_iota(jnp.int32, (rows.shape[0], tile_rows), 1)
-    onehot = (rows[:, None] == iota).astype(contrib.dtype)
-    update = jax.lax.dot_general(
-        onehot, contrib,
-        dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
+    contrib = val_ref[...][:, None].astype(jnp.float32)
+    for rows_w in factor_refs:
+        contrib = contrib * rows_w[...]
+    update = _scatter_update(rows, contrib, tile_rows)
     out_ref[...] += update.astype(out_ref.dtype)
 
 
 @functools.partial(
     jax.jit, static_argnames=("rows_cap", "blk", "tile_rows", "interpret")
 )
+def fused_mttkrp_nmode(
+    vals,
+    factor_rows,
+    local_row_in_tile,
+    tile_of_block,
+    *,
+    rows_cap: int,
+    blk: int = 512,
+    tile_rows: int = 128,
+    interpret: bool = True,
+):
+    """N-mode fused variant: Hadamard product formed in VMEM, never in HBM.
+
+    Saves 2·R·4 bytes/nonzero of HBM traffic vs. ``segment_accumulate`` on a
+    pre-materialized ``contrib`` (the §Perf memory-term optimization), for a
+    tensor of **any** order.
+
+    Args:
+      vals: ``(num_blocks*blk,)`` block-aligned nonzero values; padding is 0.
+      factor_rows: tuple/list of K = N−1 arrays, each ``(num_blocks*blk, R)``
+        — the gathered input-factor rows per nonzero, block-aligned with
+        ``vals``. R must be identical across operands (a multiple of 128 for
+        MXU alignment; ops.py pads).
+      local_row_in_tile: ``(num_blocks*blk,)`` int32 row within its tile.
+      tile_of_block: ``(num_blocks,)`` int32 output tile per block,
+        non-decreasing.
+      rows_cap: total output rows (multiple of tile_rows).
+
+    Returns:
+      ``(rows_cap, R)`` float32 accumulated output.
+    """
+    factor_rows = tuple(factor_rows)
+    assert factor_rows, "need at least one input-factor operand"
+    n_pad, rank = factor_rows[0].shape
+    for fr in factor_rows:
+        assert fr.shape == (n_pad, rank), (fr.shape, (n_pad, rank))
+    assert n_pad % blk == 0, (n_pad, blk)
+    assert rows_cap % tile_rows == 0, (rows_cap, tile_rows)
+    num_blocks = n_pad // blk
+    n_in = len(factor_rows)
+
+    in_specs = (
+        [
+            pl.BlockSpec((blk,), lambda b, tiles: (b,)),          # local_row
+            pl.BlockSpec((blk,), lambda b, tiles: (b,)),          # vals
+        ]
+        + [
+            pl.BlockSpec((blk, rank), lambda b, tiles: (b, 0))    # rows_w
+            for _ in range(n_in)
+        ]
+        + [
+            pl.BlockSpec((tile_rows, rank),
+                         lambda b, tiles: (tiles[b], 0)),         # out_init alias
+        ]
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_blocks,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tile_rows, rank),
+                               lambda b, tiles: (tiles[b], 0)),
+    )
+    out_init = jnp.zeros((rows_cap, rank), dtype=jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_fused_nmode_body, tile_rows=tile_rows),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows_cap, rank), jnp.float32),
+        # out_init -> out; operand index counts prefetch + row/val + factors.
+        input_output_aliases={3 + n_in: 0},
+        interpret=interpret,
+    )(tile_of_block, local_row_in_tile, vals, *factor_rows, out_init)
+
+
 def fused_mttkrp_3mode(
     vals,
     rows_a,
@@ -133,35 +254,8 @@ def fused_mttkrp_3mode(
     tile_rows: int = 128,
     interpret: bool = True,
 ):
-    """3-mode fused variant: Hadamard product formed in VMEM, never in HBM.
-
-    Saves 2·R·4 bytes/nonzero of HBM traffic vs. ``segment_accumulate`` on a
-    pre-materialized ``contrib`` (the §Perf memory-term optimization).
-    """
-    n_pad, rank = rows_a.shape
-    assert n_pad % blk == 0
-    assert rows_cap % tile_rows == 0
-    num_blocks = n_pad // blk
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(num_blocks,),
-        in_specs=[
-            pl.BlockSpec((blk,), lambda b, tiles: (b,)),          # local_row
-            pl.BlockSpec((blk,), lambda b, tiles: (b,)),          # vals
-            pl.BlockSpec((blk, rank), lambda b, tiles: (b, 0)),   # rows_a
-            pl.BlockSpec((blk, rank), lambda b, tiles: (b, 0)),   # rows_b
-            pl.BlockSpec((tile_rows, rank),
-                         lambda b, tiles: (tiles[b], 0)),         # out_init alias
-        ],
-        out_specs=pl.BlockSpec((tile_rows, rank),
-                               lambda b, tiles: (tiles[b], 0)),
+    """3-mode back-compat wrapper over :func:`fused_mttkrp_nmode`."""
+    return fused_mttkrp_nmode(
+        vals, (rows_a, rows_b), local_row_in_tile, tile_of_block,
+        rows_cap=rows_cap, blk=blk, tile_rows=tile_rows, interpret=interpret,
     )
-    out_init = jnp.zeros((rows_cap, rank), dtype=jnp.float32)
-    return pl.pallas_call(
-        functools.partial(_fused_body, tile_rows=tile_rows),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((rows_cap, rank), jnp.float32),
-        input_output_aliases={5: 0},        # out_init -> out (indices incl. prefetch)
-        interpret=interpret,
-    )(tile_of_block, local_row_in_tile, vals, rows_a, rows_b, out_init)

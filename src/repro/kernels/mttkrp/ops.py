@@ -1,9 +1,36 @@
-"""jit'd wrappers: FLYCOO shard layout construction + Pallas MTTKRP call.
+"""jit'd wrappers: FLYCOO shard layout construction + Pallas MTTKRP dispatch.
 
 ``build_block_layout`` turns the sorted per-device nonzero stream into the
 block-aligned layout the kernel requires (no block straddles an output row
 tile — the runtime equivalent of FLYCOO's shard/super-shard alignment), then
 ``mttkrp_device_step`` runs gather → (fused) Hadamard → blocked scatter.
+
+Backend matrix (``mttkrp_device_step(backend=...)``), valid for any tensor
+order N:
+
+  ================  =========================================================
+  backend           path
+  ================  =========================================================
+  ``pallas_fused``  N-mode fused kernel (``fused_mttkrp_nmode``): gathered
+                    factor-row blocks stream into VMEM and the Hadamard
+                    product is formed inside the kernel body. Cheapest HBM
+                    traffic — the per-nonzero ``contrib`` row is never
+                    materialized (saves 2·R·4 B/nonzero of contrib
+                    write+read vs. ``pallas``).
+  ``pallas``        materialized path: the ``(cap, R)`` contrib is built by
+                    XLA in HBM, then ``segment_accumulate`` scatters it.
+                    Smallest VMEM working set (one contrib block, no
+                    per-input-mode operands) — the fallback when N−1
+                    gathered blocks would blow the VMEM budget.
+  ``ref``           pure-jnp sorted ``segment_sum`` oracle — tiny ranks
+                    (MXU one-hot padding to R=128 wastes the array) and
+                    A/B testing.
+  ``auto``          picks one of the above from (mode count, rank padding,
+                    VMEM budget) via :func:`select_backend`.
+  ================  =========================================================
+
+(The plain-XLA ``segsum`` backend used by dry-runs lives one level up in
+``core.distributed.device_mttkrp`` — it never reaches this module.)
 
 Everything here is static-shape and jit-safe so it can live inside
 ``shard_map`` per device.
@@ -23,7 +50,18 @@ __all__ = [
     "mttkrp_blocked",
     "mttkrp_device_step",
     "pad_rank",
+    "select_backend",
+    "VMEM_BUDGET_BYTES",
 ]
+
+# Per-core VMEM working-set budget for the auto dispatch (half of a v5e
+# core's ~128 MiB VMEM — same θ=0.5 cache-fraction stance as the paper's
+# Eq. 3).
+VMEM_BUDGET_BYTES = 64 * 1024 * 1024
+
+# Below this rank the one-hot MXU matmul pads R to 128 and wastes ≥ 16× of
+# the array; the XLA segment-sum reference wins.
+_MIN_MXU_RANK = 8
 
 
 def pad_rank(x, multiple: int = 128):
@@ -34,6 +72,47 @@ def pad_rank(x, multiple: int = 128):
         return x
     widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
     return jnp.pad(x, widths)
+
+
+def padded_rank(rank: int, multiple: int = 128) -> int:
+    """Static version of :func:`pad_rank` for dispatch arithmetic."""
+    return rank + (-rank) % multiple
+
+
+def select_backend(
+    backend: str,
+    *,
+    nmodes: int,
+    rank: int,
+    blk: int = 512,
+    tile_rows: int = 128,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> str:
+    """Resolve ``auto`` to a concrete backend; pass others through.
+
+    Decision, in order (all static — safe to call under jit tracing):
+      1. ``rank < 8`` → ``ref``: the MXU one-hot scatter pads R to 128, so
+         ≥ 16× of every matmul is padding; plain segment-sum wins.
+      2. fused VMEM working set (N−1 gathered factor blocks + contrib +
+         one-hot + out tile, see ``kernel.fused_vmem_bytes``) fits the
+         budget → ``pallas_fused``: minimum HBM traffic.
+      3. otherwise → ``pallas``: materialize contrib in HBM, keeping only
+         one block in VMEM per grid step.
+    """
+    if backend != "auto":
+        if backend not in ("pallas", "pallas_fused", "ref"):
+            raise ValueError(
+                f"unknown MTTKRP backend {backend!r}: expected 'auto', "
+                "'pallas', 'pallas_fused' or 'ref' (the plain-XLA 'segsum' "
+                "path is handled by core.distributed.device_mttkrp)")
+        return backend
+    if rank < _MIN_MXU_RANK:
+        return "ref"
+    rpad = padded_rank(rank)
+    fused_bytes = _kernel.fused_vmem_bytes(nmodes - 1, rpad, blk, tile_rows)
+    if fused_bytes <= vmem_budget:
+        return "pallas_fused"
+    return "pallas"
 
 
 def n_pad_for(cap: int, rows_cap: int, blk: int, tile_rows: int) -> int:
@@ -88,6 +167,16 @@ def build_block_layout(local_row, valid, *, rows_cap: int, blk: int,
     return slot, tile_of_block
 
 
+def _align_to_blocks(x, slot, n_pad: int):
+    """Scatter ``(cap, ...)`` stream rows into their block-aligned slots.
+
+    Slot ``n_pad`` is the dump row for invalid elements; it is allocated and
+    then sliced off, so invalid entries vanish regardless of their payload.
+    """
+    out_shape = (n_pad + 1,) + x.shape[1:]
+    return jnp.zeros(out_shape, x.dtype).at[slot].set(x)[:-1]
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("rows_cap", "blk", "tile_rows", "interpret", "use_ref"),
@@ -111,11 +200,12 @@ def mttkrp_blocked(contrib, local_row, valid, *, rows_cap: int,
     )
     rank = contrib.shape[-1]
     contrib_pad = pad_rank(contrib)
-    rpad = contrib_pad.shape[-1]
-    aligned = jnp.zeros((n_pad + 1, rpad), contrib_pad.dtype)\
-        .at[slot].set(jnp.where(valid[:, None], contrib_pad, 0.0))[:-1]
-    row_aligned = jnp.zeros((n_pad + 1,), jnp.int32)\
-        .at[slot].set((local_row % tile_rows).astype(jnp.int32))[:-1]
+    aligned = _align_to_blocks(
+        jnp.where(valid[:, None], contrib_pad, 0.0), slot, n_pad
+    )
+    row_aligned = _align_to_blocks(
+        (local_row % tile_rows).astype(jnp.int32), slot, n_pad
+    )
     out = _kernel.segment_accumulate(
         aligned, row_aligned, tile_of_block,
         rows_cap=rows_cap, blk=blk, tile_rows=tile_rows, interpret=interpret,
@@ -143,40 +233,44 @@ def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
       mode: output mode.
       rows_cap: owned output rows.
       row_offset: scalar — first owned permuted row (``device_id*rows_cap``).
-      backend: ``pallas`` | ``pallas_fused`` (3-mode) | ``ref``.
+      backend: ``pallas`` | ``pallas_fused`` (any N) | ``ref`` | ``auto``
+        (see the module docstring's backend matrix).
 
     Returns ``(rows_cap, R)`` float32 local output factor rows.
     """
     nmodes = idx.shape[1]
+    rank = factors[mode].shape[-1]
+    backend = select_backend(
+        backend, nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows
+    )
     local_row = (idx[:, mode] - row_offset).astype(jnp.int32)
     local_row = jnp.where(valid, local_row, 0)
 
     in_modes = [w for w in range(nmodes) if w != mode]
-    if backend == "pallas_fused" and len(in_modes) == 2:
-        rows_a = jnp.take(factors[in_modes[0]], idx[:, in_modes[0]], axis=0)
-        rows_b = jnp.take(factors[in_modes[1]], idx[:, in_modes[1]], axis=0)
+    if backend == "pallas_fused":
         vals = jnp.where(valid, val, 0.0)
         n_pad = n_pad_for(local_row.shape[0], rows_cap, blk, tile_rows)
         slot, tile_of_block = build_block_layout(
             local_row, valid, rows_cap=rows_cap, blk=blk, tile_rows=tile_rows
         )
-        rank = rows_a.shape[-1]
-        ra = pad_rank(rows_a)
-        rb = pad_rank(rows_b)
-        rpad = ra.shape[-1]
-        ra_al = jnp.zeros((n_pad + 1, rpad), ra.dtype).at[slot].set(ra)[:-1]
-        rb_al = jnp.zeros((n_pad + 1, rpad), rb.dtype).at[slot].set(rb)[:-1]
-        v_al = jnp.zeros((n_pad + 1,), vals.dtype).at[slot].set(vals)[:-1]
-        r_al = jnp.zeros((n_pad + 1,), jnp.int32)\
-            .at[slot].set((local_row % tile_rows).astype(jnp.int32))[:-1]
-        out = _kernel.fused_mttkrp_3mode(
-            v_al, ra_al, rb_al, r_al, tile_of_block,
+        rows_al = tuple(
+            _align_to_blocks(
+                pad_rank(jnp.take(factors[w], idx[:, w], axis=0)), slot, n_pad
+            )
+            for w in in_modes
+        )
+        v_al = _align_to_blocks(vals, slot, n_pad)
+        r_al = _align_to_blocks(
+            (local_row % tile_rows).astype(jnp.int32), slot, n_pad
+        )
+        out = _kernel.fused_mttkrp_nmode(
+            v_al, rows_al, r_al, tile_of_block,
             rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
             interpret=interpret,
         )
         return out[:, :rank]
 
-    # Generic N-mode: materialize contrib, then blocked scatter.
+    # Materialized path: contrib built in HBM, then blocked scatter.
     ell = jnp.where(valid, val, 0.0)[:, None].astype(factors[0].dtype)
     for w in in_modes:
         ell = ell * jnp.take(factors[w], idx[:, w], axis=0)

@@ -20,6 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..compat import shard_map as _shard_map
 from .params import ParamSpec
 from .sharding import active_mesh_rules, shard
 
@@ -284,10 +285,9 @@ def moe_apply_owner(params, x, *, n_real: int, top_k: int,
                      P(fsdp_axes or None, exp_axes),      # shared w_up
                      P(exp_axes, fsdp_axes or None)]      # shared w_down
         args += [sh["w_gate"], sh["w_up"], sh["w_down"]]
-    y, aux, dropped = jax.shard_map(
+    y, aux, dropped = _shard_map(
         local, mesh=mesh,
         in_specs=tuple(in_specs),
         out_specs=(P(tok_spec, None), P(), P()),
-        check_vma=False,
     )(*args)
     return y.reshape(b, l, d), {"moe_aux": aux, "moe_dropped": dropped}

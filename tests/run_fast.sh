@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Fast verification tier: full suite minus `slow`/`perf` marks.
+# Target: < 120 s wall on a 1-core CPU container.
+#
+#   tests/run_fast.sh            # fast tier
+#   tests/run_fast.sh -x -k mttkrp   # extra pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    exec python -m pytest -q -m "not slow and not perf" "$@"

@@ -15,6 +15,17 @@ from repro.models.params import init_params
 
 B, L = 2, 32
 
+# Archs whose smoke configs still take tens of seconds on 1 CPU core; they
+# run in the full tier but are deselected by tests/run_fast.sh.
+_HEAVY = {"jamba-1.5-large-398b", "llama4-scout-17b-a16e",
+          "llama-3.2-vision-11b", "seamless-m4t-large-v2",
+          "internlm2-20b", "minitron-8b"}
+
+
+def _arch_params(names):
+    return [pytest.param(n, marks=pytest.mark.slow) if n in _HEAVY else n
+            for n in sorted(names)]
+
 
 def _batch(cfg, rng, l=L):
     batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, l)),
@@ -31,7 +42,7 @@ def _batch(cfg, rng, l=L):
     return batch
 
 
-@pytest.mark.parametrize("name", sorted(ARCHS))
+@pytest.mark.parametrize("name", _arch_params(ARCHS))
 def test_arch_smoke_train_and_serve(name):
     cfg = smoke_config(name)
     params = init_params(M.model_specs(cfg), seed=0)
@@ -60,7 +71,7 @@ def test_arch_smoke_train_and_serve(name):
     assert not np.any(np.isnan(np.asarray(lg2, np.float32)))
 
 
-@pytest.mark.parametrize("name", sorted(ARCHS))
+@pytest.mark.parametrize("name", _arch_params(ARCHS))
 def test_prefill_logits_match_forward(name):
     """prefill's last-token logits == forward's last position."""
     cfg = smoke_config(name)
@@ -77,9 +88,8 @@ def test_prefill_logits_match_forward(name):
                                rtol=2e-2, atol=2e-2)
 
 
-@pytest.mark.parametrize("name", ["qwen3-32b", "mamba2-370m",
-                                  "qwen2-moe-a2.7b",
-                                  "llama-3.2-vision-11b"])
+@pytest.mark.parametrize("name", _arch_params([
+    "qwen3-32b", "mamba2-370m", "qwen2-moe-a2.7b", "llama-3.2-vision-11b"]))
 def test_decode_consistent_with_forward(name):
     """Teacher-forcing forward at position l == prefill(l) + decode step."""
     cfg = smoke_config(name)

@@ -18,6 +18,7 @@ def dense_lowrank_coo(shape, rank, seed=0):
                         shape), dense
 
 
+@pytest.mark.slow
 def test_exact_recovery_rank4():
     t, dense = dense_lowrank_coo((16, 12, 10), 4, seed=0)
     res = cp_als(t, rank=4, iters=40, seed=1)

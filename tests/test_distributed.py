@@ -55,6 +55,22 @@ for n in range(3):
     r = np.asarray(outs[n]); g = np.asarray(outsp[n])
     assert np.abs(g - r).max() / (np.abs(r).max() + 1e-9) < 1e-4
 
+# --- 4-mode fused N-mode kernel end-to-end under shard_map ----------------
+t4 = random_sparse_tensor((20, 15, 12, 10), 400, seed=2)
+ft4 = build_flycoo(t4, 4, m_bounds=(2, 8), g_bounds=(8, 64), cache_bytes=1<<20,
+                   fused_gather=True)
+rt4, (idx4, val4, mask4) = dist.prepare_runtime(ft4, rank=8, tile_rows=8)
+f4 = dist.init_factors(ft4, rt4, seed=0)
+perm4 = dist._repad_indices(ft4, ft4.perm_indices.astype(np.int32), rt4.rows_cap)
+for bk in ("pallas_fused", "auto"):
+    fn4 = dist.make_spmttkrp_all_modes(rt4, mesh, backend=bk, remap=True)
+    outs4, _, d4 = fn4(idx4, val4, mask4, *f4)
+    assert int(d4["dropped"]) == 0
+    for n in range(4):
+        ref = mttkrp_elementwise_ref(perm4, t4.values, f4, n, out_rows=rt4.i_pad[n])
+        err = np.abs(np.asarray(outs4[n]) - ref).max() / (np.abs(ref).max() + 1e-9)
+        assert err < 1e-4, ("4mode", bk, n, err)
+
 # --- distributed CP-ALS == single-device CP-ALS ----------------------------
 rng = np.random.default_rng(0)
 shape = (24, 18, 12); R = 4
