@@ -1,0 +1,88 @@
+"""Dispatch quality: `auto` (static) vs. `auto` (calibrated) vs. oracle.
+
+For every dispatch key of a calibration table (an existing table under
+``experiments/tune/`` if present, else a quick in-process calibration),
+three decisions are compared:
+
+  * ``static``     — ``select_backend("auto", ...)`` with no table (the
+                     VMEM-model + rank<8 rule);
+  * ``calibrated`` — the same call with ``table=`` (measured argmin,
+                     interpolated by the ``repro.tune`` cost model);
+  * ``oracle``     — the measured-best backend from the table itself.
+
+``regret_ms`` is the measured time lost by each policy vs. the oracle.
+A second section records the per-transition vs. uniform remap-exchange
+allocation on a skewed 4-mode tensor (the ``DynasorRuntime.bucket_caps``
+win). Everything lands in ``BENCH_dispatch.json``.
+"""
+from __future__ import annotations
+
+from repro.core.flycoo import build_flycoo
+from repro.tune import microbench
+from repro.tune.model import compare_dispatch
+from repro.tune.table import find_table
+
+from .common import bench_tensor, exchange_sizing, row, write_bench_json
+
+_WORKERS = 8
+
+
+def _dispatch_rows(table) -> list[dict]:
+    rows = []
+    agree_static = agree_cal = 0
+    keys = table.shape_keys()
+    for key in keys:
+        nmodes, rank, blk, tile_rows = key
+        cmp = compare_dispatch(table, key)
+        agg, oracle = cmp["agg"], cmp["oracle"]
+        agree_static += cmp["static"] == oracle
+        agree_cal += cmp["calibrated"] == oracle
+
+        def regret(choice):
+            # a policy's choice may be un-timed (table calibrated on a
+            # backend subset) — regret is then unknowable, not a crash
+            if choice not in agg or oracle not in agg:
+                return None
+            return round((agg[choice] - agg[oracle]) * 1e3, 3)
+
+        rows.append(row(
+            "dispatch", nmodes=nmodes, rank=rank, blk=blk,
+            tile_rows=tile_rows, static=cmp["static"],
+            calibrated=cmp["calibrated"], oracle=oracle,
+            static_regret_ms=regret(cmp["static"]),
+            calibrated_regret_ms=regret(cmp["calibrated"]),
+        ))
+    if keys:
+        rows.append(row(
+            "dispatch_summary", keys=len(keys),
+            static_oracle_agreement=round(agree_static / len(keys), 3),
+            calibrated_oracle_agreement=round(agree_cal / len(keys), 3),
+            note="interpret-mode timings on CPU; re-calibrate on TPU"))
+    return rows
+
+
+def _remap_savings_rows(scale: float) -> list[dict]:
+    """Per-transition vs. uniform exchange allocation on a skewed tensor."""
+    rows = []
+    for name in ("enron-skew", "enron"):
+        t = bench_tensor(name, scale=scale)
+        ft = build_flycoo(t, num_workers=_WORKERS)
+        sizing = exchange_sizing(ft, _WORKERS)
+        rows.append(row(
+            "remap_exchange_sizing", tensor=name, nnz=t.nnz,
+            transition_caps=sizing["caps"],
+            uniform_cap=max(sizing["caps"]),
+            alltoall_uniform_MB=round(sizing["uniform_bytes"] / 1e6, 3),
+            alltoall_pertransition_MB=round(
+                sizing["per_transition_bytes"] / 1e6, 3),
+            pertransition_savings_frac=round(sizing["savings_frac"], 4)))
+    return rows
+
+
+def run(quick: bool = True, scale: float = 0.25):
+    table = find_table()
+    if table is None or not table.entries:
+        table = microbench.calibrate(quick=True)
+    rows = _dispatch_rows(table) + _remap_savings_rows(scale)
+    write_bench_json("dispatch", rows)
+    return rows

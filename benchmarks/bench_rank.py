@@ -13,16 +13,13 @@ report that modeled saving alongside measured wall time, and are written to
 """
 from __future__ import annotations
 
-import json
-import os
-
 import numpy as np
 
 from repro.core.flycoo import build_flycoo
 from repro.core.mttkrp import mttkrp_fused
 
 from .bench_total_time import _dynasor_all_modes
-from .common import bench_tensor, row, timeit
+from .common import bench_tensor, row, timeit, write_bench_json
 
 
 def _fused_vs_materialized(t, rank, blk=512, tile_rows=128):
@@ -47,8 +44,7 @@ def _fused_vs_materialized(t, rank, blk=512, tile_rows=128):
     return make("pallas_fused"), make("pallas")
 
 
-def run(quick: bool = True, scale: float = 1.0,
-        out_path: str = "experiments/bench/BENCH_rank.json"):
+def run(quick: bool = True, scale: float = 1.0):
     rows = []
     tensors = ("nell-2", "flickr") if quick else (
         "nell-2", "nell-1", "flickr", "delicious", "vast")
@@ -88,8 +84,5 @@ def run(quick: bool = True, scale: float = 1.0,
             contrib_traffic_saved_MB=round(saved / 1e6, 3),
             note="times are interpret-mode emulation; traffic is counted"))
     rows.extend(fused_rows)
-    if os.path.dirname(out_path):
-        os.makedirs(os.path.dirname(out_path), exist_ok=True)
-    with open(out_path, "w") as f:
-        json.dump(fused_rows, f, indent=1, default=str)
+    write_bench_json("rank", fused_rows)
     return rows

@@ -11,28 +11,34 @@ Per mode n:
 
 Paper's claim: remap < 15 % of elementwise traffic on FROSTT tensors.
 
-Additionally, the *allocated* all_to_all payload is counted from the FLYCOO
-schedule via ``remap_capacities`` — the per-transition static bucket bound
-the TPU runtime actually exchanges (D² buckets of the transition's max
-(src,dst) count). The gap between ``remap_GB`` (useful bytes) and
-``alltoall_padded_GB`` (allocated bytes) is the capacity-padding overhead
-on skewed tensors.
+Additionally, the *allocated* all_to_all payload is counted from the
+FLYCOO schedule via ``remap_capacities`` — and compared two ways, the
+two sizings ``DynasorRuntime`` supports:
+
+  * ``alltoall_uniform_GB`` — every transition padded to the *max*
+    capacity (the old ``bucket_cap`` behavior / ``uniform_cap=True``);
+  * ``alltoall_pertransition_GB`` — each transition sized to its own
+    bound (the tuned default).
+
+Their gap is pure padding the per-transition runtime no longer
+allocates or exchanges; ``pertransition_savings_frac`` is largest on
+skewed tensors (``enron-skew``), where one hub-heavy transition forces
+the uniform cap far above the others. The same rows are written
+machine-readably to ``BENCH_remap_traffic.json``.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core.flycoo import build_flycoo
-from repro.core.remap import remap_capacities
 
-from .common import BENCH_TENSORS, bench_tensor, row
+from .common import (BENCH_TENSORS, bench_tensor, exchange_sizing, row,
+                     write_bench_json)
 
 _WORKERS = 8
 
 
 def run(quick: bool = True, rank: int = 16, scale: float = 0.25):
     rows = []
-    for name in BENCH_TENSORS:
+    for name in BENCH_TENSORS + ("enron-skew",):
         t = bench_tensor(name, scale=scale)
         N = t.nmodes
         elem_bytes_per_nnz = 4 * N + 4          # coords + value
@@ -47,15 +53,20 @@ def run(quick: bool = True, rank: int = 16, scale: float = 0.25):
             total_remap += remap
         frac = total_remap / total_elem
         ft = build_flycoo(t, num_workers=_WORKERS)
-        caps = remap_capacities(ft)
-        padded = sum(_WORKERS * _WORKERS * c * elem_bytes_per_nnz
-                     for c in caps)
+        sizing = exchange_sizing(ft, _WORKERS)
         rows.append(row("remap_traffic_fig8", tensor=name, rank=rank,
                         elementwise_GB=round(total_elem / 1e9, 4),
                         remap_GB=round(total_remap / 1e9, 4),
                         remap_fraction=round(frac, 4),
-                        alltoall_padded_GB=round(padded / 1e9, 4),
+                        alltoall_uniform_GB=round(
+                            sizing["uniform_bytes"] / 1e9, 4),
+                        alltoall_pertransition_GB=round(
+                            sizing["per_transition_bytes"] / 1e9, 4),
+                        pertransition_savings_frac=round(
+                            sizing["savings_frac"], 4),
                         alltoall_pad_factor=round(
-                            padded / max(total_remap, 1), 3),
+                            sizing["per_transition_bytes"]
+                            / max(total_remap, 1), 3),
                         paper_claim_under_15pct=bool(frac < 0.15)))
+    write_bench_json("remap_traffic", rows)
     return rows

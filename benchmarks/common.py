@@ -9,6 +9,8 @@ wall time, and figure 8 counts exact traffic bytes.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
@@ -18,6 +20,52 @@ import numpy as np
 from repro.core.tensors import frostt_like
 
 BENCH_TENSORS = ("nell-2", "nell-1", "flickr", "delicious", "vast", "enron")
+
+BENCH_OUT_DIR = os.path.join("experiments", "bench")
+
+
+def write_bench_json(name: str, rows: list[dict],
+                     out_dir: str | None = None) -> str:
+    """Write machine-readable rows to ``<out_dir>/BENCH_<name>.json``.
+
+    The one shared writer every benchmark uses (no ad-hoc per-module
+    writers), so downstream tooling can glob ``BENCH_*.json``.
+    ``out_dir=None`` resolves to the module-level ``BENCH_OUT_DIR``,
+    which ``benchmarks.run --out`` redirects so row dumps and BENCH
+    artifacts land in one place.
+    """
+    out_dir = BENCH_OUT_DIR if out_dir is None else out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    return path
+
+
+def exchange_sizing(ft, num_workers: int) -> dict:
+    """Allocated all_to_all payload bytes for a FLYCOO tensor, both ways.
+
+    ``uniform``: every transition padded to the max capacity (the old
+    ``DynasorRuntime.bucket_cap`` / ``uniform_cap=True`` sizing).
+    ``per_transition``: each transition sized to its own
+    ``remap_capacities`` bound (the tuned default). The single source of
+    truth for bench_remap_traffic and bench_dispatch.
+    """
+    from repro.core.remap import remap_capacities
+
+    caps = remap_capacities(ft)
+    elem_bytes = 4 * ft.nmodes + 4          # coords + value
+    per_transition = sum(num_workers * num_workers * c * elem_bytes
+                         for c in caps)
+    uniform = (ft.nmodes * num_workers * num_workers * max(caps)
+               * elem_bytes)
+    return dict(
+        caps=list(map(int, caps)),
+        elem_bytes=elem_bytes,
+        uniform_bytes=uniform,
+        per_transition_bytes=per_transition,
+        savings_frac=1.0 - per_transition / max(uniform, 1),
+    )
 
 
 def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

@@ -22,7 +22,7 @@ import numpy as np
 from repro.core.tensors import FROSTT_PROFILES
 from repro.launch.mesh import HW
 
-from .common import row
+from .common import row, write_bench_json
 
 RIDGE_AI = HW["peak_flops_bf16"] / HW["hbm_bw"]     # ~241 flop/byte on v5e
 
@@ -89,4 +89,6 @@ def collect_dryrun_table(dryrun_dir: str = "experiments/dryrun"):
 
 
 def run(quick: bool = True):
-    return spmttkrp_roofline() + collect_dryrun_table()
+    rows = spmttkrp_roofline() + collect_dryrun_table()
+    write_bench_json("roofline", rows)
+    return rows

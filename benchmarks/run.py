@@ -13,9 +13,11 @@ import json
 import os
 import time
 
-from . import (bench_collective_traffic, bench_memory, bench_preprocess,
-               bench_rank, bench_remap_fusion, bench_remap_traffic,
-               bench_scaling, bench_schedule, bench_total_time, roofline)
+from . import (bench_collective_traffic, bench_dispatch, bench_memory,
+               bench_preprocess, bench_rank, bench_remap_fusion,
+               bench_remap_traffic, bench_scaling, bench_schedule,
+               bench_total_time, roofline)
+from . import common
 from .common import print_rows
 
 SUITES = {
@@ -29,6 +31,7 @@ SUITES = {
     "memory": bench_memory.run,                  # Fig. 11
     "preprocess": bench_preprocess.run,          # Fig. 12
     "collective_traffic": bench_collective_traffic.run,   # §IV lock-free claim
+    "dispatch": bench_dispatch.run,              # repro.tune calibrated auto
 }
 
 
@@ -42,6 +45,7 @@ def main() -> None:
 
     names = list(SUITES) if not args.only else args.only.split(",")
     os.makedirs(args.out, exist_ok=True)
+    common.BENCH_OUT_DIR = args.out     # BENCH_*.json follow --out
     all_rows = []
     for name in names:
         fn = SUITES[name]

@@ -1,16 +1,22 @@
 """Quickstart: sparse CP decomposition with Dynasor (paper Alg. 1+2).
 
 Builds a FROSTT-like synthetic sparse tensor, converts it to the FLYCOO
-format (super-shards + LPT schedule), and runs CP-ALS where every
-spMTTKRP uses the Dynasor owner-sorted layout.
+format (super-shards + LPT schedule), runs CP-ALS where every spMTTKRP
+uses the Dynasor owner-sorted layout, then shows the ``repro.tune``
+workflow: calibrate the backends on this host and decompose with a
+tuned runtime (measured per-mode backend plans + per-transition remap
+exchange sizing).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
+from repro.core import distributed as dist
 from repro.core.cpals import cp_als
 from repro.core.flycoo import build_flycoo, choose_partition_params
 from repro.core.tensors import frostt_like, low_rank_sparse_tensor
+from repro.kernels.mttkrp import ops as kops
+from repro import tune
 
 
 def main():
@@ -49,6 +55,27 @@ def main():
     res2 = cp_als(t2, rank=R, iters=25, seed=2)
     print(f"low-rank recovery fit: {res2.fit:.4f}")
     assert res2.fit > 0.99
+
+    # 5. tuning workflow: calibrate -> decompose with a tuned runtime.
+    #    (`python -m repro.tune calibrate --quick` does this once per host
+    #    and saves the table under experiments/tune/; here a micro-grid
+    #    keeps the example fast.)
+    grid = [tune.GridPoint(nmodes=3, rank=r, blk=32, tile_rows=8,
+                           density=1.0) for r in (16, 128)]
+    table = tune.find_table() or tune.calibrate(grid=grid)
+    for rank in (16, 128):
+        static = kops.select_backend("auto", nmodes=3, rank=rank,
+                                     blk=32, tile_rows=8)
+        tuned = kops.select_backend("auto", nmodes=3, rank=rank,
+                                    blk=32, tile_rows=8, table=table)
+        print(f"auto dispatch @rank={rank}: static={static} "
+              f"calibrated={tuned}")
+    rt, _ = dist.prepare_runtime(ft, rank=16, table=table)
+    print("tuned per-mode plans:", rt.mode_plans)
+    print("per-transition exchange caps:", rt.bucket_caps,
+          f"(uniform cap would be {rt.bucket_cap})")
+    # On a multi-device mesh the same table feeds the distributed solver:
+    #   cp_als_distributed(ft, 16, mesh, backend="auto", table=table)
     print("OK")
 
 

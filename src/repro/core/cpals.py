@@ -203,14 +203,18 @@ def make_als_sweep(rt: dist.DynasorRuntime, mesh: Mesh, *,
 def cp_als_distributed(ft: FlycooTensor, rank: int, mesh: Mesh, *,
                        iters: int = 10, seed: int = 0, tol: float = 1e-5,
                        backend: str = "segsum",
-                       tile_rows: int = 8) -> CPResult:
+                       tile_rows: int = 8, table=None) -> CPResult:
     """Distributed CP-ALS: FLYCOO layout + Dynasor sweeps on ``mesh``.
 
     Works for tensors of any order: with ``backend="pallas_fused"`` (or
     ``"auto"``) every mode of a 3-/4-/5-mode decomposition runs the fused
-    N-mode Pallas kernel end-to-end.
+    N-mode Pallas kernel end-to-end. ``table`` (a ``repro.tune``
+    calibration table) gives every mode a tuned
+    ``(backend, blk, tile_rows)`` plan, followed when ``backend="auto"``.
     """
-    rt, (idx, val, mask) = dist.prepare_runtime(ft, rank, tile_rows=tile_rows)
+    rt, (idx, val, mask) = dist.prepare_runtime(ft, rank,
+                                                tile_rows=tile_rows,
+                                                table=table)
     factors = [jnp.asarray(f) for f in dist.init_factors(ft, rt, seed=seed)]
     lam = jnp.ones((rank,), jnp.float32)
     sweep = make_als_sweep(rt, mesh, backend=backend)

@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Sequence
+from typing import Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +44,7 @@ from ..kernels.mttkrp import ops as kops
 __all__ = [
     "AXIS",
     "DynasorRuntime",
+    "ModePlan",
     "prepare_runtime",
     "init_factors",
     "make_spmttkrp_all_modes",
@@ -52,6 +53,14 @@ __all__ = [
 ]
 
 AXIS = "workers"
+
+
+class ModePlan(NamedTuple):
+    """Tuned per-mode kernel configuration (from ``repro.tune``)."""
+
+    backend: str                # segsum | pallas | pallas_fused | ref
+    blk: int                    # Pallas nonzero block for this mode
+    tile_rows: int              # Pallas output row tile for this mode
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,33 +73,80 @@ class DynasorRuntime:
     rows_cap: tuple[int, ...]   # owned output rows per worker, per mode
     i_pad: tuple[int, ...]      # num_workers * rows_cap, per mode
     nnz_cap: int                # per-worker nonzero capacity
-    bucket_cap: int             # all_to_all per-(src,dst) capacity
+    bucket_cap: int             # all_to_all per-(src,dst) capacity (max)
     shape: tuple[int, ...]      # natural tensor shape
     blk: int = 512              # Pallas nonzero block (FLYCOO shard g)
     tile_rows: int = 128        # Pallas output row tile
+    # Per-transition all_to_all capacities (remap_capacities order: entry n
+    # bounds the mode n -> n+1 exchange). None = uniform bucket_cap for
+    # every transition (the pre-tuning behavior / `uniform_cap` hatch).
+    bucket_caps: tuple[int, ...] | None = None
+    # Tuned (backend, blk, tile_rows) per mode from a calibration table.
+    # None = untuned: every mode uses (blk, tile_rows) above and the
+    # caller's backend string.
+    mode_plans: tuple[ModePlan, ...] | None = None
 
     @property
     def payload_width(self) -> int:
         return self.nmodes + 1  # coords + value
 
+    def bucket_cap_for(self, from_mode: int) -> int:
+        """Exchange capacity of the ``from_mode -> from_mode+1`` remap."""
+        if self.bucket_caps is None:
+            return self.bucket_cap
+        return self.bucket_caps[from_mode]
+
+    def plan_for(self, mode: int, backend: str = "auto") -> ModePlan:
+        """Resolve the kernel configuration for ``mode``.
+
+        Tuned runtimes always use the plan's (blk, tile_rows) — rows_cap
+        was rounded to the plan's tile — and substitute the plan's
+        backend only when the caller asked for ``auto``.
+        """
+        if self.mode_plans is not None:
+            p = self.mode_plans[mode]
+            return p if backend == "auto" else p._replace(backend=backend)
+        return ModePlan(backend, self.blk, self.tile_rows)
+
 
 def prepare_runtime(
     ft: FlycooTensor, rank: int, *, blk: int | None = None,
-    tile_rows: int = 8,
+    tile_rows: int = 8, uniform_cap: bool = False, table=None,
 ) -> tuple[DynasorRuntime, tuple[np.ndarray, np.ndarray, np.ndarray]]:
-    """Build runtime metadata + the initial mode-0 packed layout (H_0)."""
+    """Build runtime metadata + the initial mode-0 packed layout (H_0).
+
+    Args:
+      uniform_cap: escape hatch — size every remap exchange to the max
+        transition capacity (the pre-tuning behavior) instead of each
+        transition's own ``remap_capacities`` bound.
+      table: optional calibration table / cost model from ``repro.tune``;
+        when given, each mode gets a tuned ``(backend, blk, tile_rows)``
+        plan (``rows_cap`` rounds to the tuned tile) and ``backend="auto"``
+        callers follow it. ``None`` keeps the static configuration.
+    """
     D = ft.params.num_workers
-    tile = tile_rows
+    plans = None
+    if table is not None:
+        from ..tune.model import plan_modes  # deferred: tune imports core
+        plans = plan_modes(table, ft, rank)
+    tiles = (
+        tuple(p.tile_rows for p in plans) if plans is not None
+        else (tile_rows,) * ft.nmodes
+    )
     rows_cap = tuple(
-        int(-(-mp.rows_cap // tile) * tile) for mp in ft.modes  # round to tile
+        int(-(-mp.rows_cap // t) * t)                        # round to tile
+        for mp, t in zip(ft.modes, tiles)
     )
     i_pad = tuple(D * rc for rc in rows_cap)
     blk = int(blk if blk is not None else min(ft.params.g, 512))
+    caps = remap_lib.remap_capacities(ft)
     rt = DynasorRuntime(
         num_workers=D, nmodes=ft.nmodes, rank=rank, rows_cap=rows_cap,
         i_pad=i_pad, nnz_cap=ft.nnz_cap,
-        bucket_cap=remap_lib.remap_capacity(ft), shape=ft.tensor.shape,
-        blk=blk, tile_rows=tile,
+        bucket_cap=max(caps), shape=ft.tensor.shape,
+        blk=blk, tile_rows=tile_rows,
+        bucket_caps=None if uniform_cap else tuple(caps),
+        mode_plans=plans,
     )
     # pack_mode used flycoo rows_cap; re-pad indices to tile-rounded layout.
     idx, val, mask = pack_mode(ft, 0)
@@ -157,18 +213,25 @@ def _unpack_payload(payload, nmodes):
 
 def device_mttkrp(idx, val, mask, factors, mode: int, rt: DynasorRuntime,
                   backend: str):
-    """Owner-computes local MTTKRP for ``mode`` → (rows_cap, R) f32."""
+    """Owner-computes local MTTKRP for ``mode`` → (rows_cap, R) f32.
+
+    A tuned runtime (``rt.mode_plans``) supplies this mode's
+    ``(backend, blk, tile_rows)``; the plan's backend applies when the
+    caller passes ``auto``, and may be ``segsum``.
+    """
     if backend not in ("segsum", "pallas", "pallas_fused", "auto", "ref"):
         raise ValueError(
             f"unknown MTTKRP backend {backend!r}: expected 'segsum', "
             "'pallas', 'pallas_fused', 'auto' or 'ref'")
+    plan = rt.plan_for(mode, backend)
+    backend = plan.backend
     dev = jax.lax.axis_index(AXIS)
     rows_cap = rt.rows_cap[mode]
     if backend in ("pallas", "pallas_fused", "auto", "ref"):
         return kops.mttkrp_device_step(
             idx, val, mask, factors, mode=mode, rows_cap=rows_cap,
-            row_offset=dev * rows_cap, blk=rt.blk, tile_rows=rt.tile_rows,
-            interpret=True, backend=backend,
+            row_offset=dev * rows_cap, blk=plan.blk,
+            tile_rows=plan.tile_rows, interpret=True, backend=backend,
         )
     # segsum: plain XLA segment-sum path (dry-run / TPU-lowerable default).
     local_row = jnp.where(mask, idx[:, mode] - dev * rows_cap, 0)
@@ -185,19 +248,24 @@ def device_mttkrp(idx, val, mask, factors, mode: int, rt: DynasorRuntime,
 def device_remap(idx, val, mask, next_mode: int, rt: DynasorRuntime):
     """Dynamic tensor remapping: re-bucket owned nonzeros for ``next_mode``.
 
+    The exchange is sized to *this transition's* capacity
+    (``rt.bucket_cap_for``) — each all_to_all allocates only the padding
+    its own (src, dst) bound requires, not the global max.
+
     Returns ``(idx', val', mask', dropped)`` — the new owner-sorted layout.
     """
     D = rt.num_workers
+    cap = rt.bucket_cap_for((next_mode - 1) % rt.nmodes)
     dest = jnp.where(
         mask, (idx[:, next_mode] // rt.rows_cap[next_mode]).astype(jnp.int32), D
     )
     payload = _pack_payload(idx, val)
     buckets, bmask, dropped = remap_lib.bucket_by_destination(
-        dest, payload, D, rt.bucket_cap
+        dest, payload, D, cap
     )
     recv, recv_mask = remap_lib.exchange(buckets, bmask, AXIS)
-    flat = recv.reshape(D * rt.bucket_cap, rt.payload_width)
-    fmask = recv_mask.reshape(D * rt.bucket_cap)
+    flat = recv.reshape(D * cap, rt.payload_width)
+    fmask = recv_mask.reshape(D * cap)
     ridx, _ = _unpack_payload(flat, rt.nmodes)
     key = ridx[:, next_mode]  # permuted slot == sort by local row
     out, omask = remap_lib.compact_sorted(flat, fmask, key, rt.nnz_cap)

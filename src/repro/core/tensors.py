@@ -9,6 +9,7 @@ load through :func:`load_tns` when present.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Sequence
 
 import numpy as np
@@ -16,6 +17,7 @@ import numpy as np
 __all__ = [
     "SparseTensor",
     "random_sparse_tensor",
+    "zipf_4d",
     "low_rank_sparse_tensor",
     "frostt_like",
     "load_tns",
@@ -88,20 +90,103 @@ def random_sparse_tensor(
     *unbalanced* and the LPT schedule matter (paper Fig. 6).
     """
     rng = np.random.default_rng(seed)
-    cols = []
-    for dim in shape:
-        if distribution == "powerlaw":
-            # Zipf-like via inverse-CDF on a truncated Pareto.
-            u = rng.random(nnz)
-            raw = (1.0 - u) ** (-1.0 / alpha) - 1.0
-            col = np.minimum((raw * dim / raw.max()).astype(np.int64), dim - 1)
-        else:
-            col = rng.integers(0, dim, size=nnz)
-        cols.append(col)
-    indices = np.stack(cols, axis=1)
+    if distribution == "powerlaw":
+        indices = _powerlaw_columns(rng, shape, nnz, alpha)
+    else:
+        indices = np.stack([rng.integers(0, dim, size=nnz) for dim in shape],
+                           axis=1)
     values = rng.standard_normal(nnz).astype(dtype)
     values[values == 0] = 1.0
     return _dedup(indices, values, tuple(shape))
+
+
+def _powerlaw_columns(rng, shape, n: int, alpha: float) -> np.ndarray:
+    """(n, N) skewed coordinates via inverse-CDF on a truncated Pareto.
+
+    The single source of the Zipf-like hub draw — used by
+    ``random_sparse_tensor``, ``zipf_4d`` and the ``repro.tune``
+    microbenchmark case generator.
+    """
+    cols = []
+    for dim in shape:
+        u = rng.random(n)
+        raw = (1.0 - u) ** (-1.0 / alpha) - 1.0
+        cols.append(np.minimum((raw * dim / max(raw.max(), 1e-12))
+                               .astype(np.int64), dim - 1))
+    return np.stack(cols, axis=1)
+
+
+def zipf_4d(
+    shape: Sequence[int],
+    nnz: int,
+    *,
+    alpha: float = 1.3,
+    seed: int = 0,
+    max_rounds: int = 64,
+    dtype=np.float32,
+) -> SparseTensor:
+    """Skewed (Zipf-like) tensor that keeps its nnz by rejecting duplicates.
+
+    ``random_sparse_tensor(distribution='powerlaw')`` draws coordinates
+    independently and then dedups — on small high-order (e.g. scaled
+    4-mode) grids the hub coordinates collide so often that almost
+    nothing survives, which is why the ``enron`` profile had to fall
+    back to uniform indices (PR 1 note). This generator instead
+    *rejects duplicates during sampling*: it keeps drawing skewed
+    batches, keeps only coordinates not seen yet, and tops up with
+    uniform draws if the hubs saturate — so skewed 4-mode tensors with
+    full nnz exist for calibration and remap benchmarks.
+
+    Named for its motivating use; works for any order.
+    """
+    shape = tuple(shape)
+    capacity = math.prod(int(d) for d in shape)   # exact, unlike float prod
+    if nnz > capacity:
+        raise ValueError(f"nnz={nnz} exceeds tensor capacity {capacity}")
+    rng = np.random.default_rng(seed)
+    seen: set[int] = set()
+    rows: list[np.ndarray] = []
+    rounds = 0
+    while len(seen) < nnz and rounds < max_rounds:
+        rounds += 1
+        want = nnz - len(seen)
+        batch = _powerlaw_columns(rng, shape, max(want * 2, 64), alpha)
+        flat = np.ravel_multi_index(tuple(batch.T), shape)
+        # first occurrence within the batch, then against everything seen
+        _, first = np.unique(flat, return_index=True)
+        for i in np.sort(first):
+            f = int(flat[i])
+            if f not in seen:
+                seen.add(f)
+                rows.append(batch[i])
+                if len(seen) >= nnz:
+                    break
+    if len(seen) < nnz:     # hubs saturated: vectorized uniform top-up
+        missing = nnz - len(seen)
+        seen_arr = np.fromiter(seen, np.int64, len(seen))
+        if capacity <= max(4 * nnz, 1 << 20):
+            # dense regime (nnz ~ capacity): enumerate the complement
+            free = np.setdiff1d(np.arange(capacity, dtype=np.int64),
+                                seen_arr, assume_unique=True)
+            pick = rng.choice(free, size=missing, replace=False)
+        else:
+            # sparse regime: batched rejection, ≥ 3/4 hit rate per draw
+            picks: list[np.ndarray] = []
+            while missing > 0:
+                cand = np.unique(rng.integers(0, capacity,
+                                              size=max(2 * missing, 1024)))
+                cand = cand[~np.isin(cand, seen_arr)][:missing]
+                picks.append(cand)
+                seen_arr = np.concatenate([seen_arr, cand])
+                missing -= len(cand)
+            pick = np.concatenate(picks)
+        rows.extend(np.stack(np.unravel_index(pick, shape), axis=1))
+    indices = np.stack(rows, axis=0).astype(np.int32)
+    values = rng.standard_normal(nnz).astype(dtype)
+    values[values == 0] = 1.0
+    order = np.argsort(np.ravel_multi_index(tuple(indices.T), shape),
+                       kind="stable")
+    return SparseTensor(indices[order], values[order], shape)
 
 
 def low_rank_sparse_tensor(
@@ -157,6 +242,13 @@ FROSTT_PROFILES: dict[str, dict] = {
     "enron": dict(shape=(6_066, 5_699, 244_268, 1_176), nnz=54_202_099,
                   scaled_shape=(606, 569, 2442, 117), scaled_nnz=54_202,
                   distribution="uniform"),
+    # Skewed variant of enron: same profile through the duplicate-rejecting
+    # zipf_4d generator, so a 4-mode tensor with hub structure AND full nnz
+    # exists (the plain power-law generator dedups 4-mode grids to almost
+    # nothing). This is the per-transition remap-savings benchmark target.
+    "enron-skew": dict(shape=(6_066, 5_699, 244_268, 1_176), nnz=54_202_099,
+                       scaled_shape=(606, 569, 2442, 117), scaled_nnz=54_202,
+                       distribution="zipf"),
     "vast": dict(shape=(165_400, 11_400, 2, 100, 89), nnz=26_000_000,
                  scaled_shape=(16540, 1140, 2, 100, 89), scaled_nnz=26_000,
                  distribution="uniform"),
@@ -169,6 +261,8 @@ def frostt_like(name: str, *, seed: int = 0, scale: float = 1.0) -> SparseTensor
     shape = tuple(max(2, int(d * scale)) if scale != 1.0 else d
                   for d in prof["scaled_shape"])
     nnz = max(16, int(prof["scaled_nnz"] * scale))
+    if prof["distribution"] == "zipf":
+        return zipf_4d(shape, min(nnz, math.prod(shape)), seed=seed)
     return random_sparse_tensor(shape, nnz, seed=seed, distribution=prof["distribution"])
 
 

@@ -47,6 +47,7 @@ from . import ref as _ref
 
 __all__ = [
     "build_block_layout",
+    "fused_fits_vmem",
     "mttkrp_blocked",
     "mttkrp_device_step",
     "pad_rank",
@@ -79,6 +80,19 @@ def padded_rank(rank: int, multiple: int = 128) -> int:
     return rank + (-rank) % multiple
 
 
+def fused_fits_vmem(nmodes: int, rank: int, blk: int, tile_rows: int,
+                    vmem_budget: int = VMEM_BUDGET_BYTES) -> bool:
+    """Hard feasibility: does the fused kernel's working set fit VMEM?
+
+    The single predicate both dispatch layers use (static rule here,
+    tuned planning in ``repro.tune.model``) — a calibration table may
+    *prefer* ``pallas_fused``, but never past this bound.
+    """
+    fused_bytes = _kernel.fused_vmem_bytes(
+        nmodes - 1, padded_rank(rank), blk, tile_rows)
+    return fused_bytes <= vmem_budget
+
+
 def select_backend(
     backend: str,
     *,
@@ -87,10 +101,24 @@ def select_backend(
     blk: int = 512,
     tile_rows: int = 128,
     vmem_budget: int = VMEM_BUDGET_BYTES,
+    table=None,
 ) -> str:
     """Resolve ``auto`` to a concrete backend; pass others through.
 
-    Decision, in order (all static — safe to call under jit tracing):
+    When a calibration ``table`` (a ``repro.tune`` ``CalibrationTable``
+    or ``CostModel`` — anything with a ``best_backend`` method) is
+    given, ``auto`` follows the *measured* argmin interpolated to this
+    configuration instead of the static model below. The table is
+    consulted duck-typed so this module never imports ``repro.tune``;
+    if it cannot answer (no entries near this configuration) the static
+    decision applies, bit-identical to the no-table path. VMEM
+    feasibility is a hard constraint, not a preference: a table answer
+    of ``pallas_fused`` whose working set exceeds ``vmem_budget`` (an
+    extrapolation beyond the measured grid) is discarded and the static
+    decision applies.
+
+    Static decision, in order (all static — safe to call under jit
+    tracing):
       1. ``rank < 8`` → ``ref``: the MXU one-hot scatter pads R to 128, so
          ≥ 16× of every matmul is padding; plain segment-sum wins.
       2. fused VMEM working set (N−1 gathered factor blocks + contrib +
@@ -106,11 +134,27 @@ def select_backend(
                 "'pallas', 'pallas_fused' or 'ref' (the plain-XLA 'segsum' "
                 "path is handled by core.distributed.device_mttkrp)")
         return backend
+    if table is not None:
+        # Below the MXU-padding threshold the table may only answer from
+        # ranks it actually measured (a `covers` check, duck-typed like
+        # best_backend) — clamped below-grid extrapolation must not
+        # override the static rank<8 -> ref rule.
+        covers = getattr(table, "covers", None)
+        rank_ok = rank >= _MIN_MXU_RANK or (
+            covers is not None and covers(nmodes=nmodes, rank=rank,
+                                          blk=blk, tile_rows=tile_rows))
+        choice = table.best_backend(
+            nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows,
+            allowed=("pallas", "pallas_fused", "ref"),
+        ) if rank_ok else None
+        if choice == "pallas_fused" and not fused_fits_vmem(
+                nmodes, rank, blk, tile_rows, vmem_budget):
+            choice = None               # infeasible extrapolation
+        if choice is not None:
+            return choice
     if rank < _MIN_MXU_RANK:
         return "ref"
-    rpad = padded_rank(rank)
-    fused_bytes = _kernel.fused_vmem_bytes(nmodes - 1, rpad, blk, tile_rows)
-    if fused_bytes <= vmem_budget:
+    if fused_fits_vmem(nmodes, rank, blk, tile_rows, vmem_budget):
         return "pallas_fused"
     return "pallas"
 

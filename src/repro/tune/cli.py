@@ -1,0 +1,114 @@
+"""`python -m repro.tune` — calibrate / show / check.
+
+  calibrate   measure all backends over the grid, save a table JSON
+  show        print a saved table (meta, per-config best + timings)
+  check       verify dispatch decisions against the measured argmin
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from ..kernels.mttkrp import ops as kops
+from . import microbench
+from .model import compare_dispatch
+from .table import (CalibrationTable, aggregate_timings, default_table_path,
+                    find_table, load_table, measured_best)
+
+
+def _load(path: str | None) -> CalibrationTable | None:
+    if path is not None:
+        return load_table(path)
+    return find_table()
+
+
+def cmd_calibrate(args) -> int:
+    table = microbench.calibrate(quick=not args.full, seed=args.seed,
+                                 iters=args.iters, verbose=True)
+    path = args.out or default_table_path()
+    table.save(path)
+    print(f"calibrated {len(table.entries)} grid points "
+          f"({'full' if args.full else 'quick'} grid) -> {path}")
+    return 0
+
+
+def cmd_show(args) -> int:
+    table = _load(args.table)
+    if table is None:
+        print("no calibration table found (run `python -m repro.tune "
+              "calibrate` first); dispatch uses the static VMEM model")
+        return 1
+    print(f"schema_version={table.schema_version}")
+    for k, v in sorted(table.meta.items()):
+        print(f"meta.{k}={v}")
+    for key in table.shape_keys():
+        nmodes, rank, blk, tile_rows = key
+        agg = aggregate_timings(table, key)
+        timings = " ".join(f"{b}={agg[b] * 1e3:.2f}ms"
+                           for b in sorted(agg))
+        print(f"nmodes={nmodes} rank={rank} blk={blk} "
+              f"tile_rows={tile_rows} best={measured_best(agg)} {timings}")
+    return 0
+
+
+def cmd_check(args) -> int:
+    table = _load(args.table)
+    if table is None:
+        print("no calibration table found; nothing to check")
+        return 1
+    bad = 0
+    empty = CalibrationTable(entries=[])
+    for key in table.shape_keys():
+        nmodes, rank, blk, tile_rows = key
+        cmp = compare_dispatch(table, key)
+        kw = dict(nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows)
+        model_best = table.best_backend(**kw)
+        want_model = measured_best(cmp["agg"])
+        fallback = kops.select_backend("auto", table=empty, **kw)
+        ok = (model_best == want_model
+              and cmp["calibrated"] == cmp["oracle"]
+              and fallback == cmp["static"])
+        bad += not ok
+        print(f"{'ok ' if ok else 'BAD'} nmodes={nmodes} rank={rank} "
+              f"blk={blk} tile_rows={tile_rows}: model={model_best} "
+              f"(measured {want_model}), dispatch={cmp['calibrated']} "
+              f"(measured {cmp['oracle']}), static={cmp['static']} "
+              f"(empty-table fallback {fallback})")
+    print(f"{len(table.shape_keys()) - bad}/{len(table.shape_keys())} "
+          "dispatch keys consistent")
+    return 1 if bad else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.tune",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    c = sub.add_parser("calibrate", help="measure backends, save a table")
+    c.add_argument("--quick", action="store_true", default=True,
+                   help="small grid (default)")
+    c.add_argument("--full", action="store_true",
+                   help="full grid (slow in interpret mode)")
+    c.add_argument("--out", default=None,
+                   help=f"output path (default {default_table_path()})")
+    c.add_argument("--seed", type=int, default=0)
+    c.add_argument("--iters", type=int, default=2)
+    c.set_defaults(fn=cmd_calibrate)
+
+    s = sub.add_parser("show", help="print a saved calibration table")
+    s.add_argument("--table", default=None,
+                   help="table path (default: newest in experiments/tune)")
+    s.set_defaults(fn=cmd_show)
+
+    k = sub.add_parser("check",
+                       help="verify dispatch matches the measured argmin")
+    k.add_argument("--table", default=None,
+                   help="table path (default: newest in experiments/tune)")
+    k.set_defaults(fn=cmd_check)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,177 @@
+"""Microbenchmark harness: measure every MTTKRP backend on a config grid.
+
+Each grid point is a synthetic per-device mode step — a sorted,
+power-law-skewed nonzero stream of the requested density plus random
+factor matrices — timed through all four backends:
+
+  * ``pallas_fused`` / ``pallas`` / ``ref`` via
+    ``kernels.mttkrp.ops.mttkrp_device_step`` (interpret mode on CPU —
+    the timings rank the backends' *emulated* cost; on a real TPU the
+    same harness calibrates compiled kernels);
+  * ``segsum`` — the plain-XLA segment-sum path used by
+    ``core.distributed.device_mttkrp``.
+
+The ``measure`` hook is injectable (``measure(backend, point) ->
+seconds``) so tests calibrate with deterministic stub timings and the
+table/selection logic stays exactly the code path production uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.tensors import _powerlaw_columns
+from ..kernels.mttkrp import ops as kops
+from .table import CalibrationEntry, CalibrationTable, host_meta
+
+__all__ = [
+    "BACKENDS",
+    "GridPoint",
+    "default_grid",
+    "make_case",
+    "calibrate",
+]
+
+BACKENDS = ("pallas_fused", "pallas", "ref", "segsum")
+
+# Dimension of the non-output modes in a synthetic case (gather breadth).
+_SIDE_DIM = 64
+# Output row tiles per case: rows_cap = _NUM_TILES * tile_rows.
+_NUM_TILES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class GridPoint:
+    """One microbenchmark configuration."""
+
+    nmodes: int
+    rank: int
+    blk: int
+    tile_rows: int
+    density: float          # mean nonzeros per (blk × row-tile) block
+
+
+def default_grid(quick: bool = True) -> list[GridPoint]:
+    """The calibration grid; ``quick`` keeps interpret-mode runs short."""
+    if quick:
+        nmodes, ranks = (3, 4), (16, 128)
+        blks, tiles, densities = (32,), (8,), (0.5, 2.0)
+    else:
+        nmodes, ranks = (3, 4, 5), (16, 32, 64, 128, 256)
+        blks, tiles, densities = (32, 128), (8, 16), (0.25, 1.0, 4.0)
+    return [
+        GridPoint(nmodes=n, rank=r, blk=b, tile_rows=t, density=d)
+        for n in nmodes for r in ranks for b in blks for t in tiles
+        for d in densities
+    ]
+
+
+def make_case(point: GridPoint, *, seed: int = 0):
+    """Synthetic sorted stream + factors for one grid point.
+
+    Returns ``(idx, val, valid, factors, rows_cap)`` with output mode 0:
+    ``density`` sets the nonzero count per output-row tile relative to
+    ``blk``, and rows are power-law skewed (hub structure, like the
+    FROSTT tensors the dispatch will face).
+    """
+    rng = np.random.default_rng(seed)
+    rows_cap = _NUM_TILES * point.tile_rows
+    nnz = max(8, int(point.density * _NUM_TILES * point.blk))
+    # Truncated-Pareto skew, same draw as the tensor generators.
+    rows = np.sort(_powerlaw_columns(rng, (rows_cap,), nnz, 1.3)[:, 0])
+    cols = [rows] + [rng.integers(0, _SIDE_DIM, size=nnz)
+                     for _ in range(point.nmodes - 1)]
+    idx = jnp.asarray(np.stack(cols, axis=1).astype(np.int32))
+    val = jnp.asarray(rng.standard_normal(nnz).astype(np.float32))
+    valid = jnp.ones((nnz,), bool)
+    dims = (rows_cap,) + (_SIDE_DIM,) * (point.nmodes - 1)
+    factors = [jnp.asarray(rng.standard_normal((d, point.rank)), jnp.float32)
+               for d in dims]
+    return idx, val, valid, factors, rows_cap
+
+
+def _segsum_step(idx, val, valid, factors, rows_cap: int):
+    """The plain-XLA backend ``core.distributed.device_mttkrp`` uses."""
+    local_row = jnp.where(valid, idx[:, 0], 0)
+    ell = jnp.where(valid, val, 0.0)[:, None].astype(factors[0].dtype)
+    for w in range(1, idx.shape[1]):
+        ell = ell * jnp.take(factors[w], idx[:, w], axis=0)
+    return jax.ops.segment_sum(
+        ell.astype(jnp.float32), local_row, num_segments=rows_cap,
+        indices_are_sorted=True,
+    )
+
+
+def _time(fn: Callable, *, warmup: int, iters: int) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _real_measure(*, seed: int, warmup: int, iters: int) -> Callable:
+    """Default ``measure(backend, point)``: actually run the kernels."""
+    cases: dict = {}
+
+    def measure(backend: str, point: GridPoint) -> float:
+        if point not in cases:
+            cases[point] = make_case(point, seed=seed)
+        idx, val, valid, factors, rows_cap = cases[point]
+        if backend == "segsum":
+            step = jax.jit(_segsum_step, static_argnames=("rows_cap",))
+            fn = lambda: step(idx, val, valid, factors, rows_cap=rows_cap)
+        else:
+            fn = lambda: kops.mttkrp_device_step(
+                idx, val, valid, factors, mode=0, rows_cap=rows_cap,
+                row_offset=0, blk=point.blk, tile_rows=point.tile_rows,
+                interpret=True, backend=backend,
+            )
+        return _time(fn, warmup=warmup, iters=iters)
+
+    return measure
+
+
+def calibrate(
+    grid: Iterable[GridPoint] | None = None,
+    *,
+    quick: bool = True,
+    backends: Sequence[str] = BACKENDS,
+    measure: Callable | None = None,
+    seed: int = 0,
+    warmup: int = 1,
+    iters: int = 2,
+    meta_extra: dict | None = None,
+    verbose: bool = False,
+) -> CalibrationTable:
+    """Measure ``backends`` over ``grid`` and return a CalibrationTable.
+
+    ``measure(backend, point) -> seconds`` defaults to real wall-clock
+    measurement on this host; tests pass a deterministic stub.
+    """
+    points = list(grid) if grid is not None else default_grid(quick=quick)
+    if measure is None:
+        measure = _real_measure(seed=seed, warmup=warmup, iters=iters)
+    entries = []
+    for point in points:
+        timings = {b: float(measure(b, point)) for b in backends}
+        entries.append(CalibrationEntry(
+            nmodes=point.nmodes, rank=point.rank, blk=point.blk,
+            tile_rows=point.tile_rows, density=point.density,
+            timings_s=timings,
+        ))
+        if verbose:
+            best = entries[-1].best
+            print(f"  {point}: best={best} "
+                  + " ".join(f"{b}={t:.4f}s" for b, t in timings.items()),
+                  flush=True)
+    meta = host_meta(dict(meta_extra or {}, quick=quick, seed=seed))
+    return CalibrationTable(entries=entries, meta=meta)

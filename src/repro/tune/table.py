@@ -1,0 +1,260 @@
+"""Calibration table: the versioned on-disk artifact of ``repro.tune``.
+
+A table is a list of grid entries, one per measured configuration
+``(nmodes, rank, blk, tile_rows, density)``, each carrying the median
+wall seconds of every MTTKRP backend on that configuration. Tables are
+saved as JSON under ``experiments/tune/`` and loaded through a small
+registry (:func:`find_table`) that returns the newest valid table — or
+``None``, in which case every consumer falls back to the static VMEM
+model (bit-identical to the untuned dispatch).
+
+Schema versioning is strict: :meth:`CalibrationTable.from_json` refuses
+any file whose ``schema_version`` differs from :data:`SCHEMA_VERSION`,
+so a stale table from an older layout can never silently steer the
+dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+import platform
+from typing import Iterable, Sequence
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "OPS_BACKENDS",
+    "SchemaVersionError",
+    "CalibrationEntry",
+    "CalibrationTable",
+    "aggregate_timings",
+    "measured_best",
+    "default_table_path",
+    "find_table",
+    "load_table",
+]
+
+SCHEMA_VERSION = 1
+
+# Backends ``kernels.mttkrp.ops.mttkrp_device_step`` can run itself —
+# ``segsum`` dispatches one layer up (core.distributed.device_mttkrp).
+OPS_BACKENDS = ("pallas", "pallas_fused", "ref")
+
+# Where `python -m repro.tune calibrate` writes and `find_table` searches.
+DEFAULT_TABLE_DIR = os.path.join("experiments", "tune")
+
+
+class SchemaVersionError(ValueError):
+    """Raised when a table file's schema_version is not the current one."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationEntry:
+    """One measured grid point: per-backend median seconds."""
+
+    nmodes: int
+    rank: int
+    blk: int
+    tile_rows: int
+    density: float               # mean nonzeros per (blk × row-tile) block
+    timings_s: dict              # backend name -> median wall seconds
+
+    @property
+    def best(self) -> str:
+        """Measured-argmin backend (deterministic tie-break by name)."""
+        return min(sorted(self.timings_s), key=lambda b: self.timings_s[b])
+
+    @property
+    def shape_key(self) -> tuple[int, int, int, int]:
+        """The dispatch-relevant key (density aggregated out by the model)."""
+        return (self.nmodes, self.rank, self.blk, self.tile_rows)
+
+    def to_json(self) -> dict:
+        return dict(
+            nmodes=self.nmodes, rank=self.rank, blk=self.blk,
+            tile_rows=self.tile_rows, density=self.density,
+            timings_s={k: float(v) for k, v in self.timings_s.items()},
+        )
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "CalibrationEntry":
+        return cls(
+            nmodes=int(obj["nmodes"]), rank=int(obj["rank"]),
+            blk=int(obj["blk"]), tile_rows=int(obj["tile_rows"]),
+            density=float(obj["density"]),
+            timings_s={str(k): float(v)
+                       for k, v in obj["timings_s"].items()},
+        )
+
+
+@dataclasses.dataclass
+class CalibrationTable:
+    """A set of calibration entries + host metadata, JSON round-trippable."""
+
+    entries: list
+    meta: dict = dataclasses.field(default_factory=dict)
+    schema_version: int = SCHEMA_VERSION
+
+    def __post_init__(self):
+        # Lazily-built CostModel, keyed on a snapshot of the entries so
+        # appending/replacing entries after a query rebuilds it (value
+        # comparison, not id() — object addresses can be reused).
+        self._model = None
+        self._model_entries = None
+
+    # -- queries ----------------------------------------------------------
+
+    @property
+    def model(self):
+        """The interpolating :class:`repro.tune.model.CostModel` (cached)."""
+        if self._model is None or self._model_entries != self.entries:
+            from . import model as _model  # deferred: model imports table
+            self._model = _model.CostModel(self)
+            self._model_entries = list(self.entries)
+        return self._model
+
+    def best_backend(self, *, nmodes: int, rank: int, blk: int,
+                     tile_rows: int, allowed: Sequence[str] | None = None,
+                     density: float | None = None) -> str | None:
+        """Interpolated-argmin backend, or ``None`` if the table can't say.
+
+        This is the duck-typed hook ``kernels.mttkrp.ops.select_backend``
+        calls on its ``table=`` argument — ops never imports this package.
+        """
+        return self.model.best_backend(
+            nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows,
+            allowed=allowed, density=density,
+        )
+
+    def covers(self, *, nmodes: int, rank: int, blk: int,
+               tile_rows: int) -> bool:
+        """See :meth:`repro.tune.model.CostModel.covers`."""
+        return self.model.covers(nmodes=nmodes, rank=rank, blk=blk,
+                                 tile_rows=tile_rows)
+
+    def shape_keys(self) -> list[tuple[int, int, int, int]]:
+        """Unique dispatch keys, sorted (densities collapsed)."""
+        return sorted({e.shape_key for e in self.entries})
+
+    # -- (de)serialization -------------------------------------------------
+
+    def to_json(self) -> dict:
+        return dict(
+            schema_version=self.schema_version,
+            meta=dict(self.meta),
+            grid=[e.to_json() for e in self.entries],
+        )
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "CalibrationTable":
+        version = obj.get("schema_version")
+        if version != SCHEMA_VERSION:
+            raise SchemaVersionError(
+                f"calibration table schema_version={version!r} is not the "
+                f"supported version {SCHEMA_VERSION}; re-run "
+                "`python -m repro.tune calibrate`")
+        entries = [CalibrationEntry.from_json(e) for e in obj.get("grid", [])]
+        return cls(entries=entries, meta=dict(obj.get("meta", {})),
+                   schema_version=int(version))
+
+    def save(self, path: str) -> str:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "CalibrationTable":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+
+def aggregate_timings(table: CalibrationTable, key) -> dict:
+    """Median-over-density seconds per backend at one dispatch key."""
+    import numpy as np
+
+    entries = [e for e in table.entries if e.shape_key == key]
+    backends = sorted({b for e in entries for b in e.timings_s})
+    return {b: float(np.median([e.timings_s[b] for e in entries
+                                if b in e.timings_s]))
+            for b in backends}
+
+
+def measured_best(agg: dict, allowed=None) -> str | None:
+    """Argmin backend among measured ones; ``None`` if none are eligible
+    (e.g. a table calibrated on a backend subset disjoint from
+    ``allowed``)."""
+    pool = sorted(agg if allowed is None else
+                  [b for b in agg if b in allowed])
+    if not pool:
+        return None
+    return min(pool, key=lambda b: (agg[b], b))
+
+
+def host_meta(extra: dict | None = None) -> dict:
+    """Host fingerprint stored in ``meta`` — identifies where timings ran."""
+    import jax
+
+    meta = dict(
+        platform=platform.platform(),
+        machine=platform.machine(),
+        python=platform.python_version(),
+        jax=jax.__version__,
+        jax_backend=jax.default_backend(),
+        interpret=True,  # every Pallas call in this repo runs interpret on CPU
+    )
+    if extra:
+        meta.update(extra)
+    return meta
+
+
+def default_table_path(table_dir: str = DEFAULT_TABLE_DIR) -> str:
+    return os.path.join(
+        table_dir, f"calibration_v{SCHEMA_VERSION}_{platform.machine()}.json")
+
+
+def load_table(path: str) -> CalibrationTable:
+    """Load one table file (raises on missing file / wrong schema)."""
+    return CalibrationTable.load(path)
+
+
+def _matches_host(meta: dict) -> bool:
+    """Does a table's host fingerprint match this machine?
+
+    Timings from another machine/backend must not silently steer the
+    dispatch. Keys absent from ``meta`` are not checked (permissive for
+    hand-built tables); explicit mismatches reject the table.
+    """
+    import jax
+
+    current = dict(machine=platform.machine(),
+                   jax_backend=jax.default_backend())
+    return all(meta.get(k) in (None, v) for k, v in current.items())
+
+
+def find_table(table_dir: str = DEFAULT_TABLE_DIR, *,
+               match_host: bool = True) -> CalibrationTable | None:
+    """Registry lookup: newest valid ``*.json`` table in ``table_dir``.
+
+    Tables whose stored host fingerprint (machine / jax backend)
+    contradicts the current host are skipped unless ``match_host=False``
+    — calibrations are measurements of *a* machine and must not steer
+    another one. Returns ``None`` when the directory is missing or holds
+    no loadable matching table — the deterministic signal for consumers
+    to use the static VMEM-model dispatch unchanged.
+    """
+    paths = sorted(glob.glob(os.path.join(table_dir, "*.json")),
+                   key=lambda p: (os.path.getmtime(p), p), reverse=True)
+    for path in paths:
+        try:
+            table = CalibrationTable.load(path)
+        except (SchemaVersionError, json.JSONDecodeError, KeyError,
+                ValueError, OSError):
+            continue
+        if match_host and not _matches_host(table.meta):
+            continue
+        return table
+    return None
