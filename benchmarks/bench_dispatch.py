@@ -10,19 +10,28 @@ three decisions are compared:
                      interpolated by the ``repro.tune`` cost model);
   * ``oracle``     — the measured-best backend from the table itself.
 
-``regret_ms`` is the measured time lost by each policy vs. the oracle.
-A second section records the per-transition vs. uniform remap-exchange
-allocation on a skewed 4-mode tensor (the ``DynasorRuntime.bucket_caps``
-win). Everything lands in ``BENCH_dispatch.json``.
+``regret_ms`` is the measured time lost by each policy vs. the oracle
+(oracle = measured argmin over the numerics-preserving ``AUTO_BACKENDS``;
+a ``bf16_measured_ms`` column records what explicit bf16 opt-in would
+buy at each key). A second section records the per-transition vs.
+uniform remap-exchange allocation on a skewed 4-mode tensor (the
+``DynasorRuntime.bucket_caps`` win), and a third (``rank_cliff``) the
+static-dispatch record of the removed large-R fallback: configs the
+PR-2 rule sent to the HBM-materialized path on VMEM grounds that the
+rank-tiled kernel now keeps fused. Everything lands in
+``BENCH_dispatch.json``.
 """
 from __future__ import annotations
 
 from repro.core.flycoo import build_flycoo
+from repro.kernels.mttkrp import kernel as kkernel
+from repro.kernels.mttkrp import ops as kops
 from repro.tune import microbench
 from repro.tune.model import compare_dispatch
 from repro.tune.table import find_table
 
-from .common import bench_tensor, exchange_sizing, row, write_bench_json
+from .common import (bench_tensor, exchange_sizing, pr2_static_backend,
+                     row, write_bench_json)
 
 _WORKERS = 8
 
@@ -45,12 +54,15 @@ def _dispatch_rows(table) -> list[dict]:
                 return None
             return round((agg[choice] - agg[oracle]) * 1e3, 3)
 
+        bf16_ms = agg.get("pallas_fused_bf16")
         rows.append(row(
             "dispatch", nmodes=nmodes, rank=rank, blk=blk,
             tile_rows=tile_rows, static=cmp["static"],
             calibrated=cmp["calibrated"], oracle=oracle,
             static_regret_ms=regret(cmp["static"]),
             calibrated_regret_ms=regret(cmp["calibrated"]),
+            bf16_measured_ms=(None if bf16_ms is None
+                              else round(bf16_ms * 1e3, 3)),
         ))
     if keys:
         rows.append(row(
@@ -79,10 +91,48 @@ def _remap_savings_rows(scale: float) -> list[dict]:
     return rows
 
 
+def _rank_cliff_rows() -> list[dict]:
+    """Static-dispatch record of the removed large-R VMEM cliff.
+
+    Pure decision arithmetic (no timing): for shard-sized blocks and
+    growing rank, what the PR-2 static rule chose (fused iff the full
+    padded-rank working set fits, else materialized) vs. what
+    ``select_backend`` chooses now that the rank-tiled kernel exists.
+    ``contrib_traffic_MB`` is the per-mode HBM contrib write+read the
+    materialized fallback pays and the fused family avoids — the cost of
+    the cliff, per 1M nonzeros.
+    """
+    rows = []
+    for nmodes, rank, blk in [
+        (4, 1024, 2048), (4, 4096, 2048),
+        (5, 1024, 2048), (5, 2048, 2048), (5, 4096, 2048),
+        (5, 8192, 512),
+    ]:
+        tile_rows = 128
+        now = kops.select_backend("auto", nmodes=nmodes, rank=rank,
+                                  blk=blk, tile_rows=tile_rows)
+        pr2 = pr2_static_backend(nmodes, rank, blk, tile_rows)
+        rows.append(row(
+            "rank_cliff", nmodes=nmodes, rank=rank, blk=blk,
+            tile_rows=tile_rows,
+            fused_vmem_MB=round(kkernel.fused_vmem_bytes(
+                nmodes - 1, kops.padded_rank(rank), blk, tile_rows) / 2**20,
+                1),
+            tiled_vmem_MB=round(kkernel.fused_tiled_vmem_bytes(
+                nmodes - 1, kops.padded_rank(rank), blk, tile_rows) / 2**20,
+                1),
+            pr2_static=pr2, static=now,
+            cliff_removed=pr2 == "pallas" and now != "pallas",
+            contrib_traffic_MB_per_Mnnz=round(2 * rank * 4, 1),
+        ))
+    return rows
+
+
 def run(quick: bool = True, scale: float = 0.25):
     table = find_table()
     if table is None or not table.entries:
         table = microbench.calibrate(quick=True)
-    rows = _dispatch_rows(table) + _remap_savings_rows(scale)
+    rows = (_dispatch_rows(table) + _remap_savings_rows(scale)
+            + _rank_cliff_rows())
     write_bench_json("dispatch", rows)
     return rows

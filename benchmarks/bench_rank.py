@@ -10,6 +10,17 @@ The second half measures what the tentpole dispatch buys: on the 4-mode
 2·R·4 B/nonzero of extra HBM traffic (contrib write + read); the fused rows
 report that modeled saving alongside measured wall time, and are written to
 ``experiments/bench/BENCH_rank.json``.
+
+The third section (``rank_tiled_largeR``) is the rank-cliff record: a
+5-mode tensor at FLYCOO-shard-sized blocks (``blk=2048``), swept across
+R ≥ 1024. At this block size the PR-2 static dispatch abandons the
+fused win from R = 2048 up (the full-rank working set crosses the
+64 MiB budget between the R=1024 row, which still fits, and the R=2048
+row — both are recorded so the crossing is visible in the data). The
+rank-tiled kernel (``pallas_fused_tiled``) keeps the fused traffic
+saving at every rank (``rank_slabs`` × slab passes), and the
+bf16-gather variant halves the gather bytes on top; each row records
+the timed backends and the ``auto`` decision next to the PR-2 decision.
 """
 from __future__ import annotations
 
@@ -17,9 +28,12 @@ import numpy as np
 
 from repro.core.flycoo import build_flycoo
 from repro.core.mttkrp import mttkrp_fused
+from repro.core.tensors import random_sparse_tensor
+from repro.kernels.mttkrp import ops as kops
 
 from .bench_total_time import _dynasor_all_modes
-from .common import bench_tensor, row, timeit, write_bench_json
+from .common import (bench_tensor, pr2_static_backend, row, timeit,
+                     write_bench_json)
 
 
 def _fused_vs_materialized(t, rank, blk=512, tile_rows=128):
@@ -84,5 +98,57 @@ def run(quick: bool = True, scale: float = 1.0):
             contrib_traffic_saved_MB=round(saved / 1e6, 3),
             note="times are interpret-mode emulation; traffic is counted"))
     rows.extend(fused_rows)
-    write_bench_json("rank", fused_rows)
+
+    # --- rank-tiled + bf16 at R >= 1024 (the removed VMEM cliff) ----------
+    large_rows = _large_rank_rows(quick)
+    rows.extend(large_rows)
+    write_bench_json("rank", fused_rows + large_rows)
     return rows
+
+
+def _large_rank_rows(quick: bool) -> list[dict]:
+    """5-mode, shard-sized blocks, R from 1024 up: fused wins past the
+    old cliff. Wall times are interpret-mode emulation (CPU container);
+    the dispatch decisions and counted traffic are the record."""
+    import jax.numpy as jnp
+
+    shape = (256, 48, 32, 24, 16)
+    nmodes = len(shape)
+    blk, tile_rows = 2048, 128          # FLYCOO g-sized nonzero block
+    t5 = random_sparse_tensor(shape, 1500 if quick else 4000, seed=0)
+    idx = jnp.asarray(t5.indices.astype(np.int32))
+    val = jnp.asarray(t5.values.astype(np.float32))
+    rng = np.random.default_rng(1)
+    out = []
+    for rank in ((1024, 2048) if quick else (1024, 2048, 4096)):
+        factors = [jnp.asarray(rng.standard_normal((d, rank)), jnp.float32)
+                   for d in shape]
+
+        def make(backend, gather_dtype="float32"):
+            return lambda: mttkrp_fused(
+                idx, val, factors, 0, shape[0], blk=blk,
+                tile_rows=tile_rows, backend=backend,
+                gather_dtype=gather_dtype)
+
+        t_tiled = timeit(make("pallas_fused_tiled"), warmup=1, iters=2)
+        t_mat = timeit(make("pallas"), warmup=1, iters=2)
+        t_bf16 = timeit(make("pallas_fused_tiled", "bfloat16"),
+                        warmup=1, iters=2)
+        auto = kops.select_backend("auto", nmodes=nmodes, rank=rank,
+                                   blk=blk, tile_rows=tile_rows)
+        pr2 = pr2_static_backend(nmodes, rank, blk, tile_rows)
+        slabs = kops.padded_rank(rank) // kops.MXU_RANK_MULTIPLE
+        contrib_saved = t5.nnz * 2 * rank * 4       # write+read never paid
+        bf16_saved = t5.nnz * (nmodes - 1) * rank * 2   # gathers at 2B not 4B
+        out.append(row(
+            "rank_tiled_largeR", tensor="synth5", nmodes=nmodes,
+            nnz=t5.nnz, rank=rank, blk=blk, tile_rows=tile_rows,
+            rank_slabs=slabs,
+            fused_tiled_interp_s=round(t_tiled, 5),
+            materialized_interp_s=round(t_mat, 5),
+            bf16_tiled_interp_s=round(t_bf16, 5),
+            auto_backend=auto, pr2_auto_backend=pr2,
+            contrib_traffic_saved_MB=round(contrib_saved / 1e6, 3),
+            bf16_gather_saved_MB=round(bf16_saved / 1e6, 3),
+            note="times are interpret-mode emulation; traffic is counted"))
+    return out

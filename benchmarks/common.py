@@ -68,6 +68,26 @@ def exchange_sizing(ft, num_workers: int) -> dict:
     )
 
 
+def pr2_static_backend(nmodes: int, rank: int, blk: int,
+                       tile_rows: int) -> str:
+    """The PR-2 static dispatch rule, reconstructed for baseline rows.
+
+    Before the rank-tiled kernel existed, `select_backend` had exactly
+    two MXU rules: fused iff the *full* padded-rank working set fits the
+    VMEM budget, else materialize in HBM. bench_rank and bench_dispatch
+    both record this historical decision next to the current one — one
+    definition here so the two benches can never disagree about what
+    \"PR-2 behavior\" was.
+    """
+    from repro.kernels.mttkrp import ops as kops
+
+    if rank < kops.MIN_MXU_RANK:
+        return "ref"
+    if kops.fused_fits_vmem(nmodes, rank, blk, tile_rows):
+        return "pallas_fused"
+    return "pallas"
+
+
 def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall seconds; blocks on jax outputs."""
     for _ in range(warmup):

@@ -70,6 +70,10 @@ def main():
                                     blk=32, tile_rows=8, table=table)
         print(f"auto dispatch @rank={rank}: static={static} "
               f"calibrated={tuned}")
+    # the rank-tiled kernel keeps huge ranks fused (docs/kernels.md):
+    # the pre-PR-3 static model sent this config to the materialized path
+    print("auto dispatch @nmodes=5, rank=8192:",
+          kops.select_backend("auto", nmodes=5, rank=8192))
     rt, _ = dist.prepare_runtime(ft, rank=16, table=table)
     print("tuned per-mode plans:", rt.mode_plans)
     print("per-transition exchange caps:", rt.bucket_caps,

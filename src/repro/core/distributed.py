@@ -7,8 +7,9 @@ This is Alg. 2 (Dynasor) on a JAX device mesh:
     FLYCOO row permutation, see ``core.flycoo``);
   * the per-device mode step is gather → Hadamard → segment-scatter
     (``ref``/``segsum`` backends) or the Pallas blocked kernel
-    (``pallas`` materialized / ``pallas_fused`` N-mode fused / ``auto``
-    dispatch — see the backend matrix in ``kernels.mttkrp.ops``);
+    (``pallas`` materialized / ``pallas_fused`` N-mode fused /
+    ``pallas_fused_tiled`` rank-slabbed / ``pallas_fused_bf16`` /
+    ``auto`` dispatch — decision matrix in ``docs/kernels.md``);
   * **owner-computes means the output factor needs no psum** — only an
     all_gather to re-replicate it for later modes (on CPU this was "write
     once to shared DRAM");
@@ -58,9 +59,14 @@ AXIS = "workers"
 class ModePlan(NamedTuple):
     """Tuned per-mode kernel configuration (from ``repro.tune``)."""
 
-    backend: str                # segsum | pallas | pallas_fused | ref
+    backend: str                # segsum | ref | any kernels.mttkrp backend
     blk: int                    # Pallas nonzero block for this mode
     tile_rows: int              # Pallas output row tile for this mode
+    # Rank slabs the fused kernel iterates for this mode: padded_rank /
+    # RANK_SLAB when backend is pallas_fused_tiled, else 1 (the whole
+    # padded rank is one resident slab). Pure metadata for traffic
+    # accounting / benches — the kernel derives its own grid from shapes.
+    rank_slabs: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +91,20 @@ class DynasorRuntime:
     # None = untuned: every mode uses (blk, tile_rows) above and the
     # caller's backend string.
     mode_plans: tuple[ModePlan, ...] | None = None
+    # Dtype the fused kernels gather factor rows in ("float32" |
+    # "bfloat16"). bf16 halves gather-operand VMEM/HBM traffic and
+    # accumulates at fp32 (≈(N−1)·2⁻⁸ rel. error); it is threaded here — never
+    # chosen by ``auto`` — so the whole decomposition opts in explicitly.
+    gather_dtype: str = "float32"
+
+    def __post_init__(self):
+        # Validate at construction: non-fused mode steps never read this,
+        # so a typo ("bf16") would otherwise run fp32 silently or raise
+        # mid-decomposition only once a fused backend is reached.
+        if self.gather_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"unknown gather_dtype {self.gather_dtype!r}: expected "
+                "'float32' or 'bfloat16'")
 
     @property
     def payload_width(self) -> int:
@@ -102,16 +122,28 @@ class DynasorRuntime:
         Tuned runtimes always use the plan's (blk, tile_rows) — rows_cap
         was rounded to the plan's tile — and substitute the plan's
         backend only when the caller asked for ``auto``.
+        ``rank_slabs`` is re-derived from the *resolved* backend so an
+        explicit override never carries stale slab metadata (and an
+        explicit tiled backend on an untuned runtime gets the real slab
+        count); for an unresolved ``auto`` it stays the trivial 1 —
+        only the ops-level dispatch knows what auto becomes.
         """
         if self.mode_plans is not None:
             p = self.mode_plans[mode]
-            return p if backend == "auto" else p._replace(backend=backend)
-        return ModePlan(backend, self.blk, self.tile_rows)
+            if backend != "auto":
+                p = p._replace(backend=backend)
+        else:
+            p = ModePlan(backend, self.blk, self.tile_rows)
+        slabs = 1
+        if p.backend == "pallas_fused_tiled":
+            slabs = kops.padded_rank(self.rank) // kops.MXU_RANK_MULTIPLE
+        return p._replace(rank_slabs=slabs)
 
 
 def prepare_runtime(
     ft: FlycooTensor, rank: int, *, blk: int | None = None,
     tile_rows: int = 8, uniform_cap: bool = False, table=None,
+    gather_dtype: str = "float32",
 ) -> tuple[DynasorRuntime, tuple[np.ndarray, np.ndarray, np.ndarray]]:
     """Build runtime metadata + the initial mode-0 packed layout (H_0).
 
@@ -123,6 +155,8 @@ def prepare_runtime(
         when given, each mode gets a tuned ``(backend, blk, tile_rows)``
         plan (``rows_cap`` rounds to the tuned tile) and ``backend="auto"``
         callers follow it. ``None`` keeps the static configuration.
+      gather_dtype: ``"float32"`` (default) or ``"bfloat16"`` — threaded
+        to every fused-kernel mode step (see ``DynasorRuntime``).
     """
     D = ft.params.num_workers
     plans = None
@@ -146,7 +180,7 @@ def prepare_runtime(
         bucket_cap=max(caps), shape=ft.tensor.shape,
         blk=blk, tile_rows=tile_rows,
         bucket_caps=None if uniform_cap else tuple(caps),
-        mode_plans=plans,
+        mode_plans=plans, gather_dtype=gather_dtype,
     )
     # pack_mode used flycoo rows_cap; re-pad indices to tile-rounded layout.
     idx, val, mask = pack_mode(ft, 0)
@@ -219,19 +253,21 @@ def device_mttkrp(idx, val, mask, factors, mode: int, rt: DynasorRuntime,
     ``(backend, blk, tile_rows)``; the plan's backend applies when the
     caller passes ``auto``, and may be ``segsum``.
     """
-    if backend not in ("segsum", "pallas", "pallas_fused", "auto", "ref"):
+    if backend != "segsum" and backend != "auto" \
+            and backend not in kops.BACKENDS:
         raise ValueError(
             f"unknown MTTKRP backend {backend!r}: expected 'segsum', "
-            "'pallas', 'pallas_fused', 'auto' or 'ref'")
+            f"'auto' or one of {kops.BACKENDS}")
     plan = rt.plan_for(mode, backend)
     backend = plan.backend
     dev = jax.lax.axis_index(AXIS)
     rows_cap = rt.rows_cap[mode]
-    if backend in ("pallas", "pallas_fused", "auto", "ref"):
+    if backend != "segsum":
         return kops.mttkrp_device_step(
             idx, val, mask, factors, mode=mode, rows_cap=rows_cap,
             row_offset=dev * rows_cap, blk=plan.blk,
             tile_rows=plan.tile_rows, interpret=True, backend=backend,
+            gather_dtype=rt.gather_dtype,
         )
     # segsum: plain XLA segment-sum path (dry-run / TPU-lowerable default).
     local_row = jnp.where(mask, idx[:, mode] - dev * rows_cap, 0)

@@ -92,17 +92,21 @@ def mttkrp_sorted(indices, values, factors, mode: int, out_rows: int,
 @functools.partial(
     jax.jit,
     static_argnames=("mode", "out_rows", "blk", "tile_rows", "backend",
-                     "interpret"),
+                     "interpret", "gather_dtype"),
 )
 def mttkrp_fused(indices, values, factors, mode: int, out_rows: int, *,
                  blk: int = 512, tile_rows: int = 128,
-                 backend: str = "auto", interpret: bool = True):
+                 backend: str = "auto", interpret: bool = True,
+                 gather_dtype: str = "float32"):
     """Single-device spMTTKRP through the fused N-mode Pallas path.
 
     Sorts the nonzero stream by output row (the FLYCOO precondition), pads
     the output to a whole number of row tiles, and dispatches through
-    ``ops.mttkrp_device_step``'s backend matrix — ``auto`` picks fused vs.
-    materialized vs. ref from mode count, rank padding and VMEM budget.
+    ``ops.mttkrp_device_step``'s backend matrix (``docs/kernels.md``) —
+    ``auto`` picks fused vs. rank-tiled fused vs. materialized vs. ref
+    from mode count, rank padding and VMEM budget. ``gather_dtype=
+    "bfloat16"`` makes the fused family gather bf16 factor rows
+    (fp32 accumulate).
     """
     order = jnp.argsort(indices[:, mode], stable=True)
     idx = jnp.take(indices, order, axis=0).astype(jnp.int32)
@@ -112,6 +116,6 @@ def mttkrp_fused(indices, values, factors, mode: int, out_rows: int, *,
     out = _kops.mttkrp_device_step(
         idx, val, valid, list(factors), mode=mode, rows_cap=rows_cap,
         row_offset=0, blk=blk, tile_rows=tile_rows, interpret=interpret,
-        backend=backend,
+        backend=backend, gather_dtype=gather_dtype,
     )
     return out[:out_rows]

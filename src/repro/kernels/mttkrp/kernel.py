@@ -29,9 +29,22 @@ Kernel matrix (see ops.py for the dispatch layer that picks between them):
                               entirely in VMEM (loop over input modes inside
                               the kernel body). ``contrib`` never exists in
                               HBM.
+  ``fused_mttkrp_nmode_tiled``  the same gather-Hadamard-scatter with a
+                              second grid axis over ``RANK_SLAB``-wide rank
+                              slabs: each grid step holds only one slab of
+                              the N−1 factor blocks / contrib / out tile,
+                              so the VMEM working set is independent of R
+                              and the fused traffic win survives arbitrary
+                              rank (the scalar streams are re-read once per
+                              slab — the only extra cost).
   ``fused_mttkrp_3mode``      back-compat wrapper: the 3-mode (two input
                               factors) special case of the N-mode kernel.
   ==========================  =============================================
+
+Both fused kernels accept bf16 factor-row operands (``ops.py``'s
+``pallas_fused_bf16`` backend / ``gather_dtype="bfloat16"``): the Hadamard
+product is accumulated in fp32 inside the kernel regardless, so bf16 only
+halves the *gathered-operand* footprint and HBM gather traffic.
 
 Grid: one step per nonzero block. ``tile_of_block`` is scalar-prefetched and
 drives the output BlockSpec index_map. The output is zero-initialized via
@@ -48,28 +61,64 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
+    "MXU_RANK_MULTIPLE",
+    "RANK_SLAB",
     "segment_accumulate",
     "fused_mttkrp_nmode",
+    "fused_mttkrp_nmode_tiled",
     "fused_mttkrp_3mode",
     "fused_vmem_bytes",
+    "fused_tiled_vmem_bytes",
 ]
+
+# MXU lane width: the rank dimension is padded to a multiple of this for the
+# one-hot scatter matmul, and the rank-tiled kernel slabs the rank axis in
+# exactly this width. The single source of truth — ops.py (``pad_rank`` /
+# ``padded_rank`` / the rank<8 MXU-padding guard) and tune/model.py derive
+# from it rather than re-hardcoding 128.
+MXU_RANK_MULTIPLE = 128
+
+# Width of one rank slab in ``fused_mttkrp_nmode_tiled`` — one MXU lane tile.
+RANK_SLAB = MXU_RANK_MULTIPLE
 
 
 def fused_vmem_bytes(num_in_modes: int, rank_padded: int, blk: int,
-                     tile_rows: int, itemsize: int = 4) -> int:
+                     tile_rows: int, itemsize: int = 4,
+                     gather_itemsize: int | None = None) -> int:
     """VMEM working set of one ``fused_mttkrp_nmode`` grid step.
 
     N−1 gathered factor-row blocks + the in-register ``contrib`` block +
     the one-hot scatter matrix + the resident output tile + the scalar
     streams (values, local rows). ops.py's ``auto`` dispatch compares this
     against the per-core VMEM budget.
+
+    ``gather_itemsize`` sizes only the gathered factor-row blocks (2 for
+    the bf16-gather variant); contrib / one-hot / out tile always
+    accumulate at ``itemsize`` (fp32).
     """
-    factor_blocks = num_in_modes * blk * rank_padded * itemsize
+    gi = itemsize if gather_itemsize is None else gather_itemsize
+    factor_blocks = num_in_modes * blk * rank_padded * gi
     contrib_block = blk * rank_padded * itemsize
     onehot = blk * tile_rows * itemsize
     out_tile = tile_rows * rank_padded * itemsize
     scalars = 2 * blk * itemsize
     return factor_blocks + contrib_block + onehot + out_tile + scalars
+
+
+def fused_tiled_vmem_bytes(num_in_modes: int, rank_padded: int, blk: int,
+                           tile_rows: int, rank_slab: int = RANK_SLAB,
+                           itemsize: int = 4,
+                           gather_itemsize: int | None = None) -> int:
+    """VMEM working set of one ``fused_mttkrp_nmode_tiled`` grid step.
+
+    Identical to :func:`fused_vmem_bytes` with the rank axis clamped to one
+    slab — the whole point of the tiled kernel is that this is independent
+    of R, so the fused path never has to fall back to the HBM-materialized
+    kernel on rank growth.
+    """
+    return fused_vmem_bytes(
+        num_in_modes, min(rank_padded, rank_slab), blk, tile_rows,
+        itemsize=itemsize, gather_itemsize=gather_itemsize)
 
 
 def _scatter_update(rows, contrib, tile_rows: int):
@@ -152,7 +201,14 @@ def _fused_nmode_body(*refs, tile_rows: int):
     Ref layout (positional, after scalar prefetch): ``tile_ref, row_ref,
     val_ref, rows_0 … rows_{K-1}, init_ref, out_ref`` where K = N−1 input
     modes. ``contrib`` is built by looping ``contrib *= rows_w`` over the
-    gathered factor-row blocks — entirely in VMEM, never in HBM.
+    gathered factor-row blocks — entirely in VMEM, never in HBM. The
+    factor blocks may be bf16 (the bf16-gather variant); ``contrib``
+    starts fp32 so every product accumulates at fp32.
+
+    The same body serves the untiled and the rank-tiled kernel: the
+    BlockSpecs decide whether a ref covers the full padded rank or one
+    ``RANK_SLAB`` column slab, and the arithmetic is columnwise
+    independent either way.
     """
     tile_ref, row_ref, val_ref = refs[0], refs[1], refs[2]
     factor_refs = refs[3:-2]
@@ -190,8 +246,9 @@ def fused_mttkrp_nmode(
       vals: ``(num_blocks*blk,)`` block-aligned nonzero values; padding is 0.
       factor_rows: tuple/list of K = N−1 arrays, each ``(num_blocks*blk, R)``
         — the gathered input-factor rows per nonzero, block-aligned with
-        ``vals``. R must be identical across operands (a multiple of 128 for
-        MXU alignment; ops.py pads).
+        ``vals``. R must be identical across operands (a multiple of
+        ``MXU_RANK_MULTIPLE`` for MXU alignment; ops.py pads). fp32 or
+        bf16 — the Hadamard product always accumulates at fp32.
       local_row_in_tile: ``(num_blocks*blk,)`` int32 row within its tile.
       tile_of_block: ``(num_blocks,)`` int32 output tile per block,
         non-decreasing.
@@ -230,6 +287,88 @@ def fused_mttkrp_nmode(
         in_specs=in_specs,
         out_specs=pl.BlockSpec((tile_rows, rank),
                                lambda b, tiles: (tiles[b], 0)),
+    )
+    out_init = jnp.zeros((rows_cap, rank), dtype=jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_fused_nmode_body, tile_rows=tile_rows),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows_cap, rank), jnp.float32),
+        # out_init -> out; operand index counts prefetch + row/val + factors.
+        input_output_aliases={3 + n_in: 0},
+        interpret=interpret,
+    )(tile_of_block, local_row_in_tile, vals, *factor_rows, out_init)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows_cap", "blk", "tile_rows", "rank_slab",
+                     "interpret"),
+)
+def fused_mttkrp_nmode_tiled(
+    vals,
+    factor_rows,
+    local_row_in_tile,
+    tile_of_block,
+    *,
+    rows_cap: int,
+    blk: int = 512,
+    tile_rows: int = 128,
+    rank_slab: int = RANK_SLAB,
+    interpret: bool = True,
+):
+    """Rank-tiled N-mode fused variant: VMEM working set independent of R.
+
+    Same contract as :func:`fused_mttkrp_nmode` with one extra
+    precondition — R must be a multiple of ``rank_slab`` (ops.py's
+    ``pad_rank`` guarantees this; padding columns are zero and sliced
+    off by the caller). The grid gains a *major* axis over rank slabs:
+
+        grid = (R // rank_slab, num_blocks)
+
+    so for each slab the kernel makes a full pass over the nonzero
+    stream, holding only ``(blk, rank_slab)`` factor/contrib blocks and a
+    ``(tile_rows, rank_slab)`` output tile — the working set that made
+    very large R overflow VMEM in the untiled kernel no longer scales
+    with R. The block axis stays *minor* so, within a slab pass, each
+    output tile is still revisited over a contiguous run of blocks (the
+    FLYCOO sort-order invariant the accumulation relies on). Cost of
+    tiling: the scalar streams (values, local rows) are re-read once per
+    slab — ``2·4 B`` per nonzero per slab, negligible against the
+    ``(N−1)·R·4 B`` gather traffic each slab pass moves anyway.
+    """
+    factor_rows = tuple(factor_rows)
+    assert factor_rows, "need at least one input-factor operand"
+    n_pad, rank = factor_rows[0].shape
+    for fr in factor_rows:
+        assert fr.shape == (n_pad, rank), (fr.shape, (n_pad, rank))
+    assert n_pad % blk == 0, (n_pad, blk)
+    assert rank % rank_slab == 0, (rank, rank_slab)
+    assert rows_cap % tile_rows == 0, (rows_cap, tile_rows)
+    num_blocks = n_pad // blk
+    num_slabs = rank // rank_slab
+    n_in = len(factor_rows)
+
+    in_specs = (
+        [
+            pl.BlockSpec((blk,), lambda s, b, tiles: (b,)),        # local_row
+            pl.BlockSpec((blk,), lambda s, b, tiles: (b,)),        # vals
+        ]
+        + [
+            pl.BlockSpec((blk, rank_slab),
+                         lambda s, b, tiles: (b, s))               # rows_w
+            for _ in range(n_in)
+        ]
+        + [
+            pl.BlockSpec((tile_rows, rank_slab),
+                         lambda s, b, tiles: (tiles[b], s)),       # out_init
+        ]
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_slabs, num_blocks),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tile_rows, rank_slab),
+                               lambda s, b, tiles: (tiles[b], s)),
     )
     out_init = jnp.zeros((rows_cap, rank), dtype=jnp.float32)
     return pl.pallas_call(

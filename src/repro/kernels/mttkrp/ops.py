@@ -5,29 +5,18 @@ block-aligned layout the kernel requires (no block straddles an output row
 tile — the runtime equivalent of FLYCOO's shard/super-shard alignment), then
 ``mttkrp_device_step`` runs gather → (fused) Hadamard → blocked scatter.
 
-Backend matrix (``mttkrp_device_step(backend=...)``), valid for any tensor
-order N:
-
-  ================  =========================================================
-  backend           path
-  ================  =========================================================
-  ``pallas_fused``  N-mode fused kernel (``fused_mttkrp_nmode``): gathered
-                    factor-row blocks stream into VMEM and the Hadamard
-                    product is formed inside the kernel body. Cheapest HBM
-                    traffic — the per-nonzero ``contrib`` row is never
-                    materialized (saves 2·R·4 B/nonzero of contrib
-                    write+read vs. ``pallas``).
-  ``pallas``        materialized path: the ``(cap, R)`` contrib is built by
-                    XLA in HBM, then ``segment_accumulate`` scatters it.
-                    Smallest VMEM working set (one contrib block, no
-                    per-input-mode operands) — the fallback when N−1
-                    gathered blocks would blow the VMEM budget.
-  ``ref``           pure-jnp sorted ``segment_sum`` oracle — tiny ranks
-                    (MXU one-hot padding to R=128 wastes the array) and
-                    A/B testing.
-  ``auto``          picks one of the above from (mode count, rank padding,
-                    VMEM budget) via :func:`select_backend`.
-  ================  =========================================================
+The runnable backends are the :data:`BACKENDS` tuple (``ref`` / ``pallas``
+/ ``pallas_fused`` / ``pallas_fused_tiled`` / ``pallas_fused_bf16``), plus
+``auto`` which resolves through :func:`select_backend`. **The full backend
+decision matrix — per-backend traffic/VMEM characteristics, the working-set
+formulas, and worked ``auto`` examples — lives in ``docs/kernels.md``;**
+this module deliberately doesn't duplicate that table. Short version:
+``auto`` picks the cheapest numerics-preserving path that fits the VMEM
+budget (fused → rank-tiled fused → materialized, with a segment-sum ``ref``
+below the MXU-padding rank threshold); ``pallas_fused_bf16`` (bf16 gathers,
+fp32 accumulate — halves gather traffic, ≈(N−1)·2⁻⁸ rel. error) is opt-in
+only
+and never chosen by ``auto``.
 
 (The plain-XLA ``segsum`` backend used by dry-runs lives one level up in
 ``core.distributed.device_mttkrp`` — it never reaches this module.)
@@ -46,6 +35,10 @@ from . import kernel as _kernel
 from . import ref as _ref
 
 __all__ = [
+    "BACKENDS",
+    "AUTO_BACKENDS",
+    "MIN_MXU_RANK",
+    "MXU_RANK_MULTIPLE",
     "build_block_layout",
     "fused_fits_vmem",
     "mttkrp_blocked",
@@ -55,17 +48,41 @@ __all__ = [
     "VMEM_BUDGET_BYTES",
 ]
 
+# MXU lane width — rank padding multiple and the rank-slab width of the
+# tiled kernel. Single source of truth in kernel.py.
+MXU_RANK_MULTIPLE = _kernel.MXU_RANK_MULTIPLE
+
 # Per-core VMEM working-set budget for the auto dispatch (half of a v5e
 # core's ~128 MiB VMEM — same θ=0.5 cache-fraction stance as the paper's
 # Eq. 3).
 VMEM_BUDGET_BYTES = 64 * 1024 * 1024
 
-# Below this rank the one-hot MXU matmul pads R to 128 and wastes ≥ 16× of
-# the array; the XLA segment-sum reference wins.
-_MIN_MXU_RANK = 8
+# Below this rank the one-hot MXU matmul pads R to MXU_RANK_MULTIPLE and
+# wastes ≥ 16× of the array; the XLA segment-sum reference wins.
+MIN_MXU_RANK = MXU_RANK_MULTIPLE // 16
+
+# Backends this module can run (mttkrp_device_step / select_backend).
+# docs/kernels.md's decision matrix is CI-checked against this tuple
+# (tests/check_docs.py); ``segsum`` dispatches one level up in
+# core.distributed and ``auto`` is the select_backend resolver, so
+# neither appears here.
+BACKENDS = (
+    "ref",
+    "pallas",
+    "pallas_fused",
+    "pallas_fused_tiled",
+    "pallas_fused_bf16",
+)
+
+# What ``auto`` may resolve to (statically or via a calibration table):
+# every BACKENDS member that preserves fp32 numerics. ``pallas_fused_bf16``
+# trades accuracy for gather traffic and must be requested explicitly
+# (backend string or DynasorRuntime.gather_dtype) — a timing table must
+# never silently change numerics.
+AUTO_BACKENDS = tuple(b for b in BACKENDS if not b.endswith("_bf16"))
 
 
-def pad_rank(x, multiple: int = 128):
+def pad_rank(x, multiple: int = MXU_RANK_MULTIPLE):
     """Pad the trailing (rank) dim to an MXU-aligned multiple."""
     r = x.shape[-1]
     pad = (-r) % multiple
@@ -75,21 +92,27 @@ def pad_rank(x, multiple: int = 128):
     return jnp.pad(x, widths)
 
 
-def padded_rank(rank: int, multiple: int = 128) -> int:
+def padded_rank(rank: int, multiple: int = MXU_RANK_MULTIPLE) -> int:
     """Static version of :func:`pad_rank` for dispatch arithmetic."""
     return rank + (-rank) % multiple
 
 
 def fused_fits_vmem(nmodes: int, rank: int, blk: int, tile_rows: int,
-                    vmem_budget: int = VMEM_BUDGET_BYTES) -> bool:
-    """Hard feasibility: does the fused kernel's working set fit VMEM?
+                    vmem_budget: int = VMEM_BUDGET_BYTES, *,
+                    tiled: bool = False, gather_itemsize: int = 4) -> bool:
+    """Hard feasibility: does a fused kernel's working set fit VMEM?
 
     The single predicate both dispatch layers use (static rule here,
     tuned planning in ``repro.tune.model``) — a calibration table may
-    *prefer* ``pallas_fused``, but never past this bound.
+    *prefer* a fused backend, but never past this bound. ``tiled=True``
+    budgets one ``RANK_SLAB``-wide slab instead of the full padded rank
+    (the rank-tiled kernel's working set); ``gather_itemsize=2`` sizes
+    the bf16-gather variants.
     """
-    fused_bytes = _kernel.fused_vmem_bytes(
-        nmodes - 1, padded_rank(rank), blk, tile_rows)
+    fn = (_kernel.fused_tiled_vmem_bytes if tiled
+          else _kernel.fused_vmem_bytes)
+    fused_bytes = fn(nmodes - 1, padded_rank(rank), blk, tile_rows,
+                     gather_itemsize=gather_itemsize)
     return fused_bytes <= vmem_budget
 
 
@@ -111,51 +134,68 @@ def select_backend(
     configuration instead of the static model below. The table is
     consulted duck-typed so this module never imports ``repro.tune``;
     if it cannot answer (no entries near this configuration) the static
-    decision applies, bit-identical to the no-table path. VMEM
-    feasibility is a hard constraint, not a preference: a table answer
-    of ``pallas_fused`` whose working set exceeds ``vmem_budget`` (an
-    extrapolation beyond the measured grid) is discarded and the static
-    decision applies.
+    decision applies, bit-identical to the no-table path. Two hard
+    constraints bound the table, preference never overrides them:
+
+      * VMEM feasibility — a table answer of ``pallas_fused`` (or
+        ``pallas_fused_tiled``) whose working set exceeds
+        ``vmem_budget`` (an extrapolation beyond the measured grid) is
+        discarded and the static decision applies;
+      * numerics — the table is only consulted over :data:`AUTO_BACKENDS`,
+        so a measured-fast ``pallas_fused_bf16`` never changes results
+        behind ``auto``'s back.
 
     Static decision, in order (all static — safe to call under jit
-    tracing):
-      1. ``rank < 8`` → ``ref``: the MXU one-hot scatter pads R to 128, so
-         ≥ 16× of every matmul is padding; plain segment-sum wins.
+    tracing; worked examples in ``docs/kernels.md``):
+      1. ``rank < MIN_MXU_RANK`` → ``ref``: the MXU one-hot scatter pads R
+         to ``MXU_RANK_MULTIPLE``, so ≥ 16× of every matmul is padding;
+         plain segment-sum wins.
       2. fused VMEM working set (N−1 gathered factor blocks + contrib +
          one-hot + out tile, see ``kernel.fused_vmem_bytes``) fits the
          budget → ``pallas_fused``: minimum HBM traffic.
-      3. otherwise → ``pallas``: materialize contrib in HBM, keeping only
-         one block in VMEM per grid step.
+      3. the *rank-tiled* fused working set (one ``RANK_SLAB`` slab, see
+         ``kernel.fused_tiled_vmem_bytes``) fits → ``pallas_fused_tiled``:
+         same gather/scatter traffic as fused, slab-resident — this is
+         what removed the old large-R cliff onto the materialized path.
+      4. otherwise → ``pallas``: materialize contrib in HBM, keeping only
+         one block in VMEM per grid step (only reachable with extreme
+         ``blk``/``tile_rows``, since the slabbed working set no longer
+         grows with R).
     """
     if backend != "auto":
-        if backend not in ("pallas", "pallas_fused", "ref"):
+        if backend not in BACKENDS:
             raise ValueError(
-                f"unknown MTTKRP backend {backend!r}: expected 'auto', "
-                "'pallas', 'pallas_fused' or 'ref' (the plain-XLA 'segsum' "
-                "path is handled by core.distributed.device_mttkrp)")
+                f"unknown MTTKRP backend {backend!r}: expected 'auto' or "
+                f"one of {BACKENDS} (the plain-XLA 'segsum' path is "
+                "handled by core.distributed.device_mttkrp)")
         return backend
     if table is not None:
         # Below the MXU-padding threshold the table may only answer from
         # ranks it actually measured (a `covers` check, duck-typed like
         # best_backend) — clamped below-grid extrapolation must not
-        # override the static rank<8 -> ref rule.
+        # override the static rank<MIN_MXU_RANK -> ref rule.
         covers = getattr(table, "covers", None)
-        rank_ok = rank >= _MIN_MXU_RANK or (
+        rank_ok = rank >= MIN_MXU_RANK or (
             covers is not None and covers(nmodes=nmodes, rank=rank,
                                           blk=blk, tile_rows=tile_rows))
         choice = table.best_backend(
             nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows,
-            allowed=("pallas", "pallas_fused", "ref"),
+            allowed=AUTO_BACKENDS,
         ) if rank_ok else None
-        if choice == "pallas_fused" and not fused_fits_vmem(
-                nmodes, rank, blk, tile_rows, vmem_budget):
+        if choice in ("pallas_fused", "pallas_fused_tiled") \
+                and not fused_fits_vmem(
+                    nmodes, rank, blk, tile_rows, vmem_budget,
+                    tiled=choice == "pallas_fused_tiled"):
             choice = None               # infeasible extrapolation
         if choice is not None:
             return choice
-    if rank < _MIN_MXU_RANK:
+    if rank < MIN_MXU_RANK:
         return "ref"
     if fused_fits_vmem(nmodes, rank, blk, tile_rows, vmem_budget):
         return "pallas_fused"
+    if fused_fits_vmem(nmodes, rank, blk, tile_rows, vmem_budget,
+                       tiled=True):
+        return "pallas_fused_tiled"
     return "pallas"
 
 
@@ -260,11 +300,12 @@ def mttkrp_blocked(contrib, local_row, valid, *, rows_cap: int,
 @functools.partial(
     jax.jit,
     static_argnames=("mode", "rows_cap", "blk", "tile_rows", "interpret",
-                     "backend"),
+                     "backend", "gather_dtype"),
 )
 def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
                        row_offset, blk: int = 512, tile_rows: int = 128,
-                       interpret: bool = True, backend: str = "pallas"):
+                       interpret: bool = True, backend: str = "pallas",
+                       gather_dtype: str = "float32"):
     """Full per-device mode step: gather → Hadamard → blocked scatter.
 
     Args:
@@ -277,29 +318,48 @@ def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
       mode: output mode.
       rows_cap: owned output rows.
       row_offset: scalar — first owned permuted row (``device_id*rows_cap``).
-      backend: ``pallas`` | ``pallas_fused`` (any N) | ``ref`` | ``auto``
-        (see the module docstring's backend matrix).
+      backend: one of :data:`BACKENDS` or ``auto`` (decision matrix in
+        ``docs/kernels.md``).
+      gather_dtype: ``"float32"`` | ``"bfloat16"`` — dtype the fused
+        family gathers factor rows in (the accumulate is always fp32).
+        ``"bfloat16"`` composes with any fused backend; the
+        ``pallas_fused_bf16`` backend name is the untiled fused kernel
+        with this forced on (so a plain backend-string API can reach it).
+        The materialized/``ref`` paths ignore it.
 
     Returns ``(rows_cap, R)`` float32 local output factor rows.
     """
+    # Validate before dispatch: non-fused resolutions never read
+    # gather_dtype, and a typo must not pass silently on those paths.
+    if gather_dtype not in ("float32", "bfloat16"):
+        raise ValueError(
+            f"unknown gather_dtype {gather_dtype!r}: expected "
+            "'float32' or 'bfloat16'")
     nmodes = idx.shape[1]
     rank = factors[mode].shape[-1]
     backend = select_backend(
         backend, nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows
     )
+    if backend == "pallas_fused_bf16":
+        backend, gather_dtype = "pallas_fused", "bfloat16"
     local_row = (idx[:, mode] - row_offset).astype(jnp.int32)
     local_row = jnp.where(valid, local_row, 0)
 
     in_modes = [w for w in range(nmodes) if w != mode]
-    if backend == "pallas_fused":
+    if backend in ("pallas_fused", "pallas_fused_tiled"):
+        gdt = jnp.bfloat16 if gather_dtype == "bfloat16" else jnp.float32
         vals = jnp.where(valid, val, 0.0)
         n_pad = n_pad_for(local_row.shape[0], rows_cap, blk, tile_rows)
         slot, tile_of_block = build_block_layout(
             local_row, valid, rows_cap=rows_cap, blk=blk, tile_rows=tile_rows
         )
+        # Cast the factor *matrix* before the take so the gather itself
+        # moves gather_dtype-sized rows (the traffic the bf16 variant
+        # halves), not fp32 rows cast afterwards.
         rows_al = tuple(
             _align_to_blocks(
-                pad_rank(jnp.take(factors[w], idx[:, w], axis=0)), slot, n_pad
+                pad_rank(jnp.take(factors[w].astype(gdt), idx[:, w], axis=0)),
+                slot, n_pad
             )
             for w in in_modes
         )
@@ -307,7 +367,10 @@ def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
         r_al = _align_to_blocks(
             (local_row % tile_rows).astype(jnp.int32), slot, n_pad
         )
-        out = _kernel.fused_mttkrp_nmode(
+        kern = (_kernel.fused_mttkrp_nmode_tiled
+                if backend == "pallas_fused_tiled"
+                else _kernel.fused_mttkrp_nmode)
+        out = kern(
             v_al, rows_al, r_al, tile_of_block,
             rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
             interpret=interpret,

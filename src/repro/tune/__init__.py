@@ -5,9 +5,10 @@ in ``core.distributed`` were originally driven by static models (a VMEM
 working-set estimate and a worst-case bucket capacity). This package
 replaces both with *measurements*:
 
-  * :mod:`repro.tune.microbench` — times every backend
-    (``pallas_fused``, ``pallas``, ``ref``, ``segsum``) over a grid of
-    ``(nmodes, rank, blk, tile_rows, density)`` on the current host;
+  * :mod:`repro.tune.microbench` — times every backend (the
+    ``kernels.mttkrp.ops.BACKENDS`` family — fused, rank-tiled fused,
+    bf16-gather fused, materialized, ref — plus ``segsum``) over a grid
+    of ``(nmodes, rank, blk, tile_rows, density)`` on the current host;
   * :mod:`repro.tune.table` — the versioned JSON calibration table
     those timings are saved into (``experiments/tune/``), with a
     registry that falls back deterministically to the static model when
@@ -48,14 +49,17 @@ model, so untuned hosts behave exactly as before calibration.
 """
 from .microbench import BACKENDS, GridPoint, calibrate, default_grid
 from .model import CostModel, compare_dispatch, plan_modes
-from .table import (OPS_BACKENDS, SCHEMA_VERSION, CalibrationEntry,
-                    CalibrationTable, SchemaVersionError, aggregate_timings,
+from .table import (AUTO_BACKENDS, COMPAT_SCHEMA_VERSIONS, OPS_BACKENDS,
+                    SCHEMA_VERSION, CalibrationEntry, CalibrationTable,
+                    SchemaVersionError, aggregate_timings,
                     default_table_path, find_table, load_table,
                     measured_best)
 
 __all__ = [
     "BACKENDS",
     "OPS_BACKENDS",
+    "AUTO_BACKENDS",
+    "COMPAT_SCHEMA_VERSIONS",
     "GridPoint",
     "calibrate",
     "default_grid",

@@ -41,6 +41,10 @@ def cmd_show(args) -> int:
     print(f"schema_version={table.schema_version}")
     for k, v in sorted(table.meta.items()):
         print(f"meta.{k}={v}")
+    if "upgraded_from_schema" in table.meta:
+        print("note: table pre-dates the current backend set "
+              "(pallas_fused_tiled / pallas_fused_bf16 unmeasured); "
+              "re-run `python -m repro.tune calibrate` to time them")
     for key in table.shape_keys():
         nmodes, rank, blk, tile_rows = key
         agg = aggregate_timings(table, key)

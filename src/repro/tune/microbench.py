@@ -2,14 +2,20 @@
 
 Each grid point is a synthetic per-device mode step — a sorted,
 power-law-skewed nonzero stream of the requested density plus random
-factor matrices — timed through all four backends:
+factor matrices — timed through every backend:
 
-  * ``pallas_fused`` / ``pallas`` / ``ref`` via
-    ``kernels.mttkrp.ops.mttkrp_device_step`` (interpret mode on CPU —
-    the timings rank the backends' *emulated* cost; on a real TPU the
-    same harness calibrates compiled kernels);
+  * the ``kernels.mttkrp.ops.BACKENDS`` family (``pallas_fused``,
+    ``pallas``, ``pallas_fused_tiled``, ``pallas_fused_bf16``, ``ref``)
+    via ``mttkrp_device_step`` (interpret mode on CPU — the timings rank
+    the backends' *emulated* cost; on a real TPU the same harness
+    calibrates compiled kernels);
   * ``segsum`` — the plain-XLA segment-sum path used by
     ``core.distributed.device_mttkrp``.
+
+``pallas_fused_bf16`` timings are recorded like any other backend but
+the ``auto`` dispatch never follows them (numerics opt-in — see
+``ops.AUTO_BACKENDS``); they exist so ``repro.tune show`` / the bench
+suite can report what explicit bf16 opt-in would buy.
 
 The ``measure`` hook is injectable (``measure(backend, point) ->
 seconds``) so tests calibrate with deterministic stub timings and the
@@ -37,7 +43,9 @@ __all__ = [
     "calibrate",
 ]
 
-BACKENDS = ("pallas_fused", "pallas", "ref", "segsum")
+# Everything the microbench times: the ops-runnable backends + the
+# distributed layer's plain-XLA segsum path.
+BACKENDS = kops.BACKENDS + ("segsum",)
 
 # Dimension of the non-output modes in a synthetic case (gather breadth).
 _SIDE_DIM = 64
@@ -62,7 +70,9 @@ def default_grid(quick: bool = True) -> list[GridPoint]:
         nmodes, ranks = (3, 4), (16, 128)
         blks, tiles, densities = (32,), (8,), (0.5, 2.0)
     else:
-        nmodes, ranks = (3, 4, 5), (16, 32, 64, 128, 256)
+        # rank 512 = 4 rank slabs: the full grid actually exercises the
+        # tiled kernel's slab loop, so its knots aren't extrapolations.
+        nmodes, ranks = (3, 4, 5), (16, 32, 64, 128, 256, 512)
         blks, tiles, densities = (32, 128), (8, 16), (0.25, 1.0, 4.0)
     return [
         GridPoint(nmodes=n, rank=r, blk=b, tile_rows=t, density=d)

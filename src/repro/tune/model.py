@@ -28,9 +28,35 @@ from typing import Sequence
 import numpy as np
 
 from ..core.distributed import ModePlan
-from ..kernels.mttkrp.ops import fused_fits_vmem, select_backend
+from ..kernels.mttkrp.ops import (AUTO_BACKENDS, MIN_MXU_RANK,
+                                  MXU_RANK_MULTIPLE, fused_fits_vmem,
+                                  padded_rank, select_backend)
 
 __all__ = ["CostModel", "compare_dispatch", "plan_modes"]
+
+
+def _feasible(backends, nmodes: int, rank: int, blk: int, tile_rows: int,
+              *, covered: bool):
+    """Filter ``backends`` by the same hard constraints select_backend's
+    table path applies: fused working sets must fit VMEM (per family —
+    untiled / rank-tiled / bf16-gather), and no MXU one-hot backend below
+    ``MIN_MXU_RANK`` unless that rank was actually measured
+    (``covered`` — below-grid extrapolation is not evidence)."""
+    out = []
+    for b in backends:
+        if rank < MIN_MXU_RANK and not covered and b.startswith("pallas"):
+            continue
+        if b == "pallas_fused" and not fused_fits_vmem(
+                nmodes, rank, blk, tile_rows):
+            continue
+        if b == "pallas_fused_tiled" and not fused_fits_vmem(
+                nmodes, rank, blk, tile_rows, tiled=True):
+            continue
+        if b == "pallas_fused_bf16" and not fused_fits_vmem(
+                nmodes, rank, blk, tile_rows, gather_itemsize=2):
+            continue
+        out.append(b)
+    return out
 
 
 class CostModel:
@@ -152,18 +178,20 @@ def compare_dispatch(table, key) -> dict:
 
     The one shared definition of the consistency standard, used by both
     ``repro.tune check`` and ``benchmarks.bench_dispatch`` so they can
-    never disagree. ``oracle`` is the measured argmin over the
-    ops-runnable backends; when the table timed none of them, the
-    static rule *is* the standard (the table cannot answer).
+    never disagree. ``oracle`` is the measured argmin over the backends
+    ``auto`` may actually pick (the numerics-preserving
+    ``AUTO_BACKENDS`` — a measured-fast bf16 is not a valid target for a
+    dispatch that must not change results); when the table timed none of
+    them, the static rule *is* the standard (the table cannot answer).
     """
-    from .table import OPS_BACKENDS, aggregate_timings, measured_best
+    from .table import AUTO_BACKENDS, aggregate_timings, measured_best
 
     nmodes, rank, blk, tile_rows = key
     agg = aggregate_timings(table, key)
     kw = dict(nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows)
     static = select_backend("auto", **kw)
     calibrated = select_backend("auto", table=table, **kw)
-    oracle = measured_best(agg, allowed=OPS_BACKENDS)
+    oracle = measured_best(agg, allowed=AUTO_BACKENDS)
     if oracle is None:
         oracle = static
     return dict(agg=agg, static=static, calibrated=calibrated,
@@ -181,6 +209,13 @@ def plan_modes(table, ft, rank: int, *,
     have emptier blocks) and keeps the global argmin. Returns ``None``
     when the table cannot answer (empty / no overlapping backends), so
     callers keep the static configuration.
+
+    With ``allowed=None`` the candidate pool is every measured backend
+    *except* the bf16-gather variants — like ``select_backend``'s table
+    path, an automatic planner must not change numerics on timing
+    evidence. Pass ``allowed`` explicitly (e.g.
+    ``table.model.backends``) to let a bf16-opted-in runtime plan with
+    them.
     """
     model = table if isinstance(table, CostModel) else CostModel(table)
     D = num_workers if num_workers is not None else ft.params.num_workers
@@ -192,18 +227,17 @@ def plan_modes(table, ft, rank: int, *,
         for blk, tile_rows in model.shape_candidates(ft.nmodes):
             num_tiles = max(1, -(-rows_per_worker // tile_rows))
             density = nnz_per_worker / (num_tiles * blk)
-            cand_allowed = model.backends if allowed is None else allowed
-            # Same hard constraints as select_backend's table path: no
-            # fused kernel past the VMEM budget, and no MXU one-hot
-            # backend below rank 8 unless that rank was actually
-            # measured (below-grid extrapolation is not evidence).
-            if not fused_fits_vmem(ft.nmodes, rank, blk, tile_rows):
-                cand_allowed = [b for b in cand_allowed
-                                if b != "pallas_fused"]
-            if rank < 8 and not model.covers(nmodes=ft.nmodes, rank=rank,
-                                             blk=blk, tile_rows=tile_rows):
-                cand_allowed = [b for b in cand_allowed
-                                if b not in ("pallas", "pallas_fused")]
+            # Default pool = measured ∩ (AUTO_BACKENDS + segsum): the one
+            # numerics-preserving policy defined in ops.py, plus the
+            # distributed layer's own segsum path.
+            cand_allowed = (
+                [b for b in model.backends
+                 if b == "segsum" or b in AUTO_BACKENDS]
+                if allowed is None else allowed)
+            cand_allowed = _feasible(
+                cand_allowed, ft.nmodes, rank, blk, tile_rows,
+                covered=model.covers(nmodes=ft.nmodes, rank=rank, blk=blk,
+                                     tile_rows=tile_rows))
             choice = model.best_backend(
                 nmodes=ft.nmodes, rank=rank, blk=blk, tile_rows=tile_rows,
                 allowed=cand_allowed, density=density)
@@ -217,5 +251,8 @@ def plan_modes(table, ft, rank: int, *,
         if best is None:
             return None
         _, blk, tile_rows, backend = best
-        plans.append(ModePlan(backend=backend, blk=blk, tile_rows=tile_rows))
+        slabs = (padded_rank(rank) // MXU_RANK_MULTIPLE
+                 if backend == "pallas_fused_tiled" else 1)
+        plans.append(ModePlan(backend=backend, blk=blk, tile_rows=tile_rows,
+                              rank_slabs=slabs))
     return tuple(plans)

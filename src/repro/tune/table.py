@@ -8,10 +8,19 @@ registry (:func:`find_table`) that returns the newest valid table — or
 ``None``, in which case every consumer falls back to the static VMEM
 model (bit-identical to the untuned dispatch).
 
-Schema versioning is strict: :meth:`CalibrationTable.from_json` refuses
-any file whose ``schema_version`` differs from :data:`SCHEMA_VERSION`,
-so a stale table from an older layout can never silently steer the
-dispatch.
+Schema versioning is strict with an explicit compatibility window:
+:meth:`CalibrationTable.from_json` accepts the current
+:data:`SCHEMA_VERSION` plus the versions in :data:`COMPAT_SCHEMA_VERSIONS`
+(upgraded in-memory on load) and refuses anything else, so a stale table
+from an incompatible layout can never silently steer the dispatch.
+
+Version history (full field reference in ``experiments/tune/README.md``):
+  * v1 — PR 2 original: grid entries over the 4 original backends.
+  * v2 — rank-tiled + bf16 backends (``pallas_fused_tiled``,
+    ``pallas_fused_bf16``) join the measured set. Entry structure is
+    unchanged (``timings_s`` is an open backend→seconds map), so v1
+    tables load under v2 — they simply carry no timings for the new
+    backends and the model answers ``None`` for them.
 """
 from __future__ import annotations
 
@@ -22,9 +31,13 @@ import os
 import platform
 from typing import Iterable, Sequence
 
+from ..kernels.mttkrp import ops as _kops
+
 __all__ = [
     "SCHEMA_VERSION",
+    "COMPAT_SCHEMA_VERSIONS",
     "OPS_BACKENDS",
+    "AUTO_BACKENDS",
     "SchemaVersionError",
     "CalibrationEntry",
     "CalibrationTable",
@@ -35,11 +48,19 @@ __all__ = [
     "load_table",
 ]
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+
+# Older schema versions from_json still understands (upgraded on load).
+COMPAT_SCHEMA_VERSIONS = (1,)
 
 # Backends ``kernels.mttkrp.ops.mttkrp_device_step`` can run itself —
 # ``segsum`` dispatches one layer up (core.distributed.device_mttkrp).
-OPS_BACKENDS = ("pallas", "pallas_fused", "ref")
+# Single source of truth is ops.py so the tuner can never drift from
+# the dispatch.
+OPS_BACKENDS = _kops.BACKENDS
+
+# The numerics-preserving subset ``auto`` may resolve to (see ops.py).
+AUTO_BACKENDS = _kops.AUTO_BACKENDS
 
 # Where `python -m repro.tune calibrate` writes and `find_table` searches.
 DEFAULT_TABLE_DIR = os.path.join("experiments", "tune")
@@ -149,14 +170,22 @@ class CalibrationTable:
     @classmethod
     def from_json(cls, obj: dict) -> "CalibrationTable":
         version = obj.get("schema_version")
-        if version != SCHEMA_VERSION:
+        if version != SCHEMA_VERSION and version not in \
+                COMPAT_SCHEMA_VERSIONS:
             raise SchemaVersionError(
                 f"calibration table schema_version={version!r} is not the "
-                f"supported version {SCHEMA_VERSION}; re-run "
+                f"supported version {SCHEMA_VERSION} (or compatible "
+                f"{COMPAT_SCHEMA_VERSIONS}); re-run "
                 "`python -m repro.tune calibrate`")
         entries = [CalibrationEntry.from_json(e) for e in obj.get("grid", [])]
-        return cls(entries=entries, meta=dict(obj.get("meta", {})),
-                   schema_version=int(version))
+        meta = dict(obj.get("meta", {}))
+        if version != SCHEMA_VERSION:
+            # Back-compat upgrade: v1 entries are structurally identical,
+            # they just never measured the newer backends. Record the
+            # provenance so `repro.tune show` can suggest re-calibrating.
+            meta.setdefault("upgraded_from_schema", int(version))
+        return cls(entries=entries, meta=meta,
+                   schema_version=SCHEMA_VERSION)
 
     def save(self, path: str) -> str:
         d = os.path.dirname(path)

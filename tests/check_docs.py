@@ -1,0 +1,134 @@
+#!/usr/bin/env python3
+"""Docs consistency checks — run by the CI `docs` job and by pytest.
+
+Two checks, both stdlib-only (no jax import, so the CI job needs
+nothing but a Python interpreter):
+
+1. **Intra-repo markdown links resolve.** Every relative
+   ``[text](path)`` link in the repo's tracked ``*.md`` files must
+   point at an existing file/directory (``#fragment`` suffixes are
+   stripped; ``http(s)://`` / ``mailto:`` links are skipped).
+
+2. **docs/kernels.md backend matrix ↔ ops.BACKENDS sync.** The matrix
+   rows between the ``<!-- BACKENDS:BEGIN/END -->`` markers must list
+   exactly the backends of ``repro.kernels.mttkrp.ops.BACKENDS`` plus
+   the two dispatch-level names (``auto``, ``segsum``). ``BACKENDS`` is
+   read from the source with ``ast`` so adding a backend without
+   documenting it (or vice versa) fails CI.
+
+Exit status 0 iff both checks pass; failures are printed one per line.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OPS_PATH = os.path.join(REPO_ROOT, "src", "repro", "kernels", "mttkrp",
+                        "ops.py")
+KERNELS_DOC = os.path.join(REPO_ROOT, "docs", "kernels.md")
+
+# Names the matrix documents beyond ops.BACKENDS: the auto resolver and
+# the distributed layer's plain-XLA path.
+DISPATCH_LEVEL_NAMES = {"auto", "segsum"}
+
+_SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", ".claude",
+              "node_modules", ".venv"}
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_ROW_NAME_RE = re.compile(r"^\|\s*`([a-z0-9_]+)`")
+
+
+def iter_markdown_files():
+    for dirpath, dirnames, filenames in os.walk(REPO_ROOT):
+        dirnames[:] = [d for d in dirnames if d not in _SKIP_DIRS]
+        for name in sorted(filenames):
+            if name.endswith(".md"):
+                yield os.path.join(dirpath, name)
+
+
+def check_links() -> tuple[list[str], int]:
+    """Returns (errors, number_of_links_checked)."""
+    errors, checked = [], 0
+    for md in iter_markdown_files():
+        with open(md, encoding="utf-8") as f:
+            text = f.read()
+        for target in _LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            checked += 1
+            path = target.split("#", 1)[0]
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(md), path))
+            if not os.path.exists(resolved):
+                rel = os.path.relpath(md, REPO_ROOT)
+                errors.append(f"{rel}: broken link -> {target}")
+    return errors, checked
+
+
+def ops_backends() -> tuple[str, ...]:
+    """`BACKENDS` from ops.py via ast — no jax import needed."""
+    with open(OPS_PATH, encoding="utf-8") as f:
+        tree = ast.parse(f.read(), filename=OPS_PATH)
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "BACKENDS"
+                for t in node.targets):
+            value = ast.literal_eval(node.value)
+            return tuple(value)
+    raise AssertionError(f"no literal BACKENDS assignment found in "
+                         f"{OPS_PATH}")
+
+
+def documented_backends() -> set[str]:
+    """Backend names in kernels.md's marked matrix rows."""
+    with open(KERNELS_DOC, encoding="utf-8") as f:
+        text = f.read()
+    try:
+        block = text.split("<!-- BACKENDS:BEGIN -->", 1)[1] \
+                    .split("<!-- BACKENDS:END -->", 1)[0]
+    except IndexError:
+        raise AssertionError(
+            "docs/kernels.md is missing the <!-- BACKENDS:BEGIN/END --> "
+            "markers around the backend matrix")
+    names = set()
+    for line in block.splitlines():
+        m = _ROW_NAME_RE.match(line.strip())
+        if m:
+            names.add(m.group(1))
+    return names
+
+
+def check_backend_sync() -> list[str]:
+    errors = []
+    code = set(ops_backends())
+    docs = documented_backends()
+    want = code | DISPATCH_LEVEL_NAMES
+    for missing in sorted(want - docs):
+        errors.append(
+            f"docs/kernels.md: backend `{missing}` exists in ops.py "
+            "(or is a dispatch-level name) but is missing from the "
+            "decision matrix")
+    for stale in sorted(docs - want):
+        errors.append(
+            f"docs/kernels.md: backend `{stale}` is documented but not "
+            "in ops.BACKENDS — remove the row or add the backend")
+    return errors
+
+
+def main() -> int:
+    link_errors, checked = check_links()
+    sync_errors = check_backend_sync()
+    for e in link_errors + sync_errors:
+        print(f"FAIL {e}")
+    if link_errors or sync_errors:
+        return 1
+    n_backends = len(ops_backends())
+    print(f"docs checks passed: {checked} markdown links resolve, "
+          f"{n_backends} backends in sync with docs/kernels.md")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -213,18 +213,25 @@ def test_auto_falls_back_on_tiny_rank():
     assert kops.select_backend("auto", nmodes=5, rank=7) == "ref"
 
 
-def test_auto_falls_back_on_vmem_pressure():
-    # Shrink the budget below the N-1 gathered-operand working set.
+def test_auto_degrades_to_tiled_then_materialized_on_vmem_pressure():
+    # Budget below the full-rank gathered working set, but above one
+    # rank slab: the rank-tiled fused kernel keeps the traffic win.
     tight = kkernel.fused_vmem_bytes(3, 256, 512, 128) - 1
+    assert kkernel.fused_tiled_vmem_bytes(3, 256, 512, 128) < tight
     assert kops.select_backend("auto", nmodes=4, rank=256,
-                               vmem_budget=tight) == "pallas"
-    # Same rank, fewer input modes -> fits again.
+                               vmem_budget=tight) == "pallas_fused_tiled"
+    # Same rank, fewer input modes -> the untiled kernel fits again.
     assert kops.select_backend(
         "auto", nmodes=2, rank=256, vmem_budget=tight) == "pallas_fused"
+    # Budget below even one slab -> the HBM-materialized path remains
+    # the last resort.
+    tiny = kkernel.fused_tiled_vmem_bytes(3, 256, 512, 128) - 1
+    assert kops.select_backend("auto", nmodes=4, rank=256,
+                               vmem_budget=tiny) == "pallas"
 
 
 def test_explicit_backends_pass_through():
-    for b in ("pallas", "pallas_fused", "ref"):
+    for b in kops.BACKENDS:
         assert kops.select_backend(b, nmodes=4, rank=4) == b
 
 

@@ -21,7 +21,8 @@ from repro.tune.microbench import BACKENDS, GridPoint
 from repro.tune.table import (SCHEMA_VERSION, CalibrationTable,
                               SchemaVersionError)
 
-_OPS_BACKENDS = ("pallas", "pallas_fused", "ref")
+_OPS_BACKENDS = kops.BACKENDS
+_AUTO_BACKENDS = kops.AUTO_BACKENDS
 
 
 def fake_measure(backend, p):
@@ -32,6 +33,10 @@ def fake_measure(backend, p):
         "segsum": 0.0006 * p.rank,
         "pallas": 0.05 + 0.0002 * k + 1e-5 * p.blk,
         "pallas_fused": 0.09 + 0.00007 * k + 2e-5 * p.tile_rows,
+        # slightly behind untiled at small rank (slab-loop overhead) ...
+        "pallas_fused_tiled": 0.095 + 0.00007 * k + 2e-5 * p.tile_rows,
+        # ... and bf16 always fastest, to prove auto still never picks it
+        "pallas_fused_bf16": 0.04 + 0.00004 * k + 2e-5 * p.tile_rows,
     }[backend]
 
 
@@ -145,7 +150,8 @@ def test_off_grid_shape_resolves_to_nearest_group():
 # ---------------------------------------------------------------------------
 
 def test_select_backend_matches_measured_argmin_on_grid(table):
-    """Acceptance: table-driven auto == measured best on EVERY grid key."""
+    """Acceptance: table-driven auto == measured best on EVERY grid key
+    (argmin over the numerics-preserving AUTO_BACKENDS — never bf16)."""
     for key in table.shape_keys():
         n, r, b, t = key
         agg = {
@@ -153,7 +159,7 @@ def test_select_backend_matches_measured_argmin_on_grid(table):
                                  if e.shape_key == key]))
             for bk in BACKENDS
         }
-        want = min(sorted(_OPS_BACKENDS), key=lambda bk: (agg[bk], bk))
+        want = min(sorted(_AUTO_BACKENDS), key=lambda bk: (agg[bk], bk))
         got = kops.select_backend("auto", nmodes=n, rank=r, blk=b,
                                   tile_rows=t, table=table)
         assert got == want, (key, got, want)
@@ -163,29 +169,39 @@ def test_select_backend_without_table_is_static(table):
     """No table (or an unanswerable one) -> bit-identical static choices."""
     empty = CalibrationTable(entries=[])
     for nmodes in (2, 3, 4, 5):
-        for rank in (4, 16, 64, 256, 2048):
-            kw = dict(nmodes=nmodes, rank=rank, blk=512, tile_rows=128)
-            static = kops.select_backend("auto", **kw)
-            # reimplementation of the documented static rule
-            if rank < 8:
-                want = "ref"
-            else:
+        for rank in (4, 16, 64, 256, 2048, 8192):
+            for blk in (512, 2048):
+                kw = dict(nmodes=nmodes, rank=rank, blk=blk, tile_rows=128)
+                static = kops.select_backend("auto", **kw)
+                # reimplementation of the documented static rule
                 rpad = kops.padded_rank(rank)
-                fits = kkernel.fused_vmem_bytes(
-                    nmodes - 1, rpad, 512, 128) <= kops.VMEM_BUDGET_BYTES
-                want = "pallas_fused" if fits else "pallas"
-            assert static == want
-            assert kops.select_backend("auto", table=empty, **kw) == static
+                if rank < kops.MIN_MXU_RANK:
+                    want = "ref"
+                elif kkernel.fused_vmem_bytes(
+                        nmodes - 1, rpad, blk, 128) <= \
+                        kops.VMEM_BUDGET_BYTES:
+                    want = "pallas_fused"
+                elif kkernel.fused_tiled_vmem_bytes(
+                        nmodes - 1, rpad, blk, 128) <= \
+                        kops.VMEM_BUDGET_BYTES:
+                    want = "pallas_fused_tiled"
+                else:
+                    want = "pallas"
+                assert static == want
+                assert kops.select_backend(
+                    "auto", table=empty, **kw) == static
 
 
-def test_select_backend_table_never_returns_segsum(table):
-    # segsum is always fastest under fake_measure at rank 16, but ops
-    # cannot run it -- the table path must restrict to ops backends.
+def test_select_backend_table_never_returns_segsum_or_bf16(table):
+    # segsum is always fastest under fake_measure at rank 16 and bf16 is
+    # fastest everywhere, but ops cannot run the former and auto must
+    # not change numerics via the latter -- the table path restricts to
+    # the numerics-preserving ops backends.
     for key in table.shape_keys():
         n, r, b, t = key
         got = kops.select_backend("auto", nmodes=n, rank=r, blk=b,
                                   tile_rows=t, table=table)
-        assert got in _OPS_BACKENDS
+        assert got in _AUTO_BACKENDS
 
 
 def test_explicit_backend_ignores_table(table):
@@ -217,7 +233,10 @@ def test_below_grid_rank_keeps_static_mxu_guard(table):
 def test_table_cannot_pick_infeasible_fused():
     """VMEM feasibility is a hard constraint even when the table loves
     pallas_fused: extrapolating far beyond the measured grid must not
-    select a fused working set that exceeds the budget."""
+    select a fused working set that exceeds the budget. (The static
+    fallback it lands on is now the rank-tiled kernel, whose slabbed
+    working set always fits — the PR-2 rule fell all the way back to
+    the materialized path here.)"""
     t = _table_with_ranks(
         (16, 256), lambda r: {"pallas_fused": 0.001, "pallas": 1.0,
                               "ref": 1.0})
@@ -225,7 +244,7 @@ def test_table_cannot_pick_infeasible_fused():
     assert kkernel.fused_vmem_bytes(
         4, kops.padded_rank(8192), 512, 128) > kops.VMEM_BUDGET_BYTES
     got = kops.select_backend("auto", table=t, **kw)
-    assert got == kops.select_backend("auto", **kw) == "pallas"
+    assert got == kops.select_backend("auto", **kw) == "pallas_fused_tiled"
     # ...and plan_modes applies the same guard per candidate shape
     entries = [tune.CalibrationEntry(nmodes=3, rank=r, blk=512,
                                      tile_rows=128, density=1.0,
