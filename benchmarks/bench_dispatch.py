@@ -15,11 +15,15 @@ three decisions are compared:
 a ``bf16_measured_ms`` column records what explicit bf16 opt-in would
 buy at each key). A second section records the per-transition vs.
 uniform remap-exchange allocation on a skewed 4-mode tensor (the
-``DynasorRuntime.bucket_caps`` win), and a third (``rank_cliff``) the
+``DynasorRuntime.bucket_caps`` win), a third (``rank_cliff``) the
 static-dispatch record of the removed large-R fallback: configs the
 PR-2 rule sent to the HBM-materialized path on VMEM grounds that the
-rank-tiled kernel now keeps fused. Everything lands in
-``BENCH_dispatch.json``.
+rank-tiled kernel now keeps fused, and a fourth (``gather_traffic``)
+the PR-4 in-kernel-gather record: counted per-nonzero HBM operand
+bytes — ``(N−1)·4`` B of indices for the gather family vs
+``(N−1)·R̂·4`` B of HBM-materialized gathered rows for the older fused
+path — next to the static decision with factor-size knowledge.
+Everything lands in ``BENCH_dispatch.json``.
 """
 from __future__ import annotations
 
@@ -128,11 +132,49 @@ def _rank_cliff_rows() -> list[dict]:
     return rows
 
 
+def _gather_traffic_rows() -> list[dict]:
+    """PR-4 record: counted per-nonzero operand bytes, gather vs fused.
+
+    Pure decision/traffic arithmetic (no timing): for realistic factor
+    sizes, what ``select_backend`` picks once the caller supplies
+    ``factor_rows`` (as ``mttkrp_device_step`` always does), and the
+    per-nonzero HBM stream each family moves — the gather family's
+    ``(N−1)·4`` B index stream vs the ``(N−1)·R̂·4`` B of materialized
+    gathered rows the PR-3 fused path wrote and re-read.
+    """
+    rows = []
+    for nmodes, rank, factor_rows in [
+        (3, 128, 20_000), (4, 128, 50_000), (4, 256, 50_000),
+        (5, 512, 100_000), (4, 256, 40_000_000),   # huge factors: no resident fit
+    ]:
+        blk, tile_rows = 512, 128
+        rpad = kops.padded_rank(rank)
+        with_fr = kops.select_backend(
+            "auto", nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows,
+            factor_rows=factor_rows)
+        without_fr = kops.select_backend(
+            "auto", nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows)
+        rows.append(row(
+            "gather_traffic", nmodes=nmodes, rank=rank, blk=blk,
+            tile_rows=tile_rows, factor_rows=factor_rows,
+            gather_resident_MB=round(kkernel.gather_vmem_bytes(
+                nmodes - 1, rpad, blk, tile_rows, factor_rows) / 2**20, 1),
+            gather_tiled_resident_MB=round(kkernel.gather_tiled_vmem_bytes(
+                nmodes - 1, rpad, blk, tile_rows, factor_rows) / 2**20, 1),
+            static_with_factor_rows=with_fr,
+            static_without_factor_rows=without_fr,
+            gather_index_stream_B_per_nnz=(nmodes - 1) * 4,
+            fused_operand_B_per_nnz=(nmodes - 1) * rpad * 4,
+            in_kernel_gather=with_fr in kops.GATHER_BACKENDS,
+        ))
+    return rows
+
+
 def run(quick: bool = True, scale: float = 0.25):
     table = find_table()
     if table is None or not table.entries:
         table = microbench.calibrate(quick=True)
     rows = (_dispatch_rows(table) + _remap_savings_rows(scale)
-            + _rank_cliff_rows())
+            + _rank_cliff_rows() + _gather_traffic_rows())
     write_bench_json("dispatch", rows)
     return rows

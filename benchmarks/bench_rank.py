@@ -11,6 +11,15 @@ The second half measures what the tentpole dispatch buys: on the 4-mode
 report that modeled saving alongside measured wall time, and are written to
 ``experiments/bench/BENCH_rank.json``.
 
+The ``gather_in_kernel`` section is the PR-4 tentpole record: on the
+same 4-mode tensor, ``pallas_fused_gather`` (factor matrices resident in
+VMEM, gather performed inside the kernel on an int32 index stream) vs.
+``pallas_fused`` (gathered factor rows materialized in HBM by the
+caller). The counted per-nonzero operand stream drops from
+``(N−1)·R̂·4`` B of rows to ``(N−1)·4`` B of indices — a factor R̂ —
+and each row records both terms plus the end-to-end ``auto`` decision
+with and without factor-size knowledge.
+
 The third section (``rank_tiled_largeR``) is the rank-cliff record: a
 5-mode tensor at FLYCOO-shard-sized blocks (``blk=2048``), swept across
 R ≥ 1024. At this block size the PR-2 static dispatch abandons the
@@ -99,11 +108,69 @@ def run(quick: bool = True, scale: float = 1.0):
             note="times are interpret-mode emulation; traffic is counted"))
     rows.extend(fused_rows)
 
+    # --- gather-in-kernel: index stream vs materialized rows --------------
+    gather_rows = _gather_in_kernel_rows(t4, quick)
+    rows.extend(gather_rows)
+
     # --- rank-tiled + bf16 at R >= 1024 (the removed VMEM cliff) ----------
     large_rows = _large_rank_rows(quick)
     rows.extend(large_rows)
-    write_bench_json("rank", fused_rows + large_rows)
+    write_bench_json("rank", fused_rows + gather_rows + large_rows)
     return rows
+
+
+def _gather_in_kernel_rows(t4, quick: bool) -> list[dict]:
+    """PR-4 tentpole: per-nonzero HBM operand bytes, gather vs fused.
+
+    The fused path materializes every gathered factor row in HBM —
+    ``(N−1)·R̂·4`` B written and re-read per nonzero before the kernel
+    ever runs. The gather family streams ``(N−1)·4`` B of int32 indices
+    instead and holds the replicated factors in VMEM. Wall times are
+    interpret-mode emulation; the counted bytes are the record.
+    """
+    import jax.numpy as jnp
+    rng = np.random.default_rng(2)
+    nmodes = t4.nmodes
+    idx = jnp.asarray(t4.indices.astype(np.int32))
+    val = jnp.asarray(t4.values.astype(np.float32))
+    out = []
+    for rank in ((32, 128) if quick else (32, 64, 128, 256)):
+        factors = [jnp.asarray(rng.standard_normal((d, rank)), jnp.float32)
+                   for d in t4.shape]
+
+        def make(backend):
+            def run():
+                return [mttkrp_fused(idx, val, factors, n, t4.shape[n],
+                                     blk=512, tile_rows=128, backend=backend)
+                        for n in range(nmodes)]
+            return run
+
+        t_gather = timeit(make("pallas_fused_gather"), warmup=1, iters=2)
+        t_fused = timeit(make("pallas_fused"), warmup=1, iters=2)
+        rpad = kops.padded_rank(rank)
+        fused_operand_B = (nmodes - 1) * rpad * 4     # materialized rows
+        index_stream_B = (nmodes - 1) * 4             # int32 indices
+        factor_rows = sum(t4.shape) - min(t4.shape)   # worst mode resident
+        auto_fr = kops.select_backend(
+            "auto", nmodes=nmodes, rank=rank, blk=512, tile_rows=128,
+            factor_rows=factor_rows)
+        auto_no_fr = kops.select_backend(
+            "auto", nmodes=nmodes, rank=rank, blk=512, tile_rows=128)
+        out.append(row(
+            "gather_in_kernel", tensor="enron", nmodes=nmodes, nnz=t4.nnz,
+            rank=rank, rank_padded=rpad,
+            gather_interp_s=round(t_gather, 5),
+            fused_interp_s=round(t_fused, 5),
+            fused_operand_B_per_nnz=fused_operand_B,
+            gather_index_stream_B_per_nnz=index_stream_B,
+            operand_traffic_ratio=round(fused_operand_B / index_stream_B, 1),
+            operand_traffic_saved_MB=round(
+                t4.nnz * nmodes * (fused_operand_B - index_stream_B) / 1e6,
+                3),
+            auto_with_factor_rows=auto_fr,
+            auto_without_factor_rows=auto_no_fr,
+            note="times are interpret-mode emulation; traffic is counted"))
+    return out
 
 
 def _large_rank_rows(quick: bool) -> list[dict]:

@@ -13,10 +13,10 @@ import json
 import os
 import time
 
-from . import (bench_collective_traffic, bench_dispatch, bench_memory,
-               bench_preprocess, bench_rank, bench_remap_fusion,
-               bench_remap_traffic, bench_scaling, bench_schedule,
-               bench_total_time, roofline)
+from . import (bench_bf16_convergence, bench_collective_traffic,
+               bench_dispatch, bench_memory, bench_preprocess, bench_rank,
+               bench_remap_fusion, bench_remap_traffic, bench_scaling,
+               bench_schedule, bench_total_time, roofline)
 from . import common
 from .common import print_rows
 
@@ -32,6 +32,7 @@ SUITES = {
     "preprocess": bench_preprocess.run,          # Fig. 12
     "collective_traffic": bench_collective_traffic.run,   # §IV lock-free claim
     "dispatch": bench_dispatch.run,              # repro.tune calibrated auto
+    "bf16_convergence": bench_bf16_convergence.run,   # bf16 gathers, fit gap
 }
 
 

@@ -43,7 +43,8 @@ def main():
     assert res.fit > 0.99
 
     # 4-mode decomposition through the fused N-mode Pallas path end-to-end
-    # (backend="auto" dispatches every mode to fused_mttkrp_nmode).
+    # (backend="auto" dispatches every mode to the in-kernel-gather fused
+    # kernel — the factors here easily fit VMEM-resident).
     shape4, R4 = (12, 10, 8, 6), 8   # R >= 8 so "auto" picks the fused path
     facs4 = [rng.standard_normal((d, R4)) for d in shape4]
     dense4 = np.einsum("ir,jr,kr,lr->ijkl", *facs4)

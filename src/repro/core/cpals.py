@@ -203,7 +203,8 @@ def make_als_sweep(rt: dist.DynasorRuntime, mesh: Mesh, *,
 def cp_als_distributed(ft: FlycooTensor, rank: int, mesh: Mesh, *,
                        iters: int = 10, seed: int = 0, tol: float = 1e-5,
                        backend: str = "segsum",
-                       tile_rows: int = 8, table=None) -> CPResult:
+                       tile_rows: int = 8, table=None,
+                       gather_dtype: str = "float32") -> CPResult:
     """Distributed CP-ALS: FLYCOO layout + Dynasor sweeps on ``mesh``.
 
     Works for tensors of any order: with ``backend="pallas_fused"`` (or
@@ -211,10 +212,15 @@ def cp_als_distributed(ft: FlycooTensor, rank: int, mesh: Mesh, *,
     N-mode Pallas kernel end-to-end. ``table`` (a ``repro.tune``
     calibration table) gives every mode a tuned
     ``(backend, blk, tile_rows)`` plan, followed when ``backend="auto"``.
+    ``gather_dtype="bfloat16"`` opts the whole decomposition into bf16
+    factor-row gathers on every fused-family mode step (fp32
+    accumulate); the end-to-end fit impact is measured by
+    ``benchmarks/bench_bf16_convergence.py``.
     """
     rt, (idx, val, mask) = dist.prepare_runtime(ft, rank,
                                                 tile_rows=tile_rows,
-                                                table=table)
+                                                table=table,
+                                                gather_dtype=gather_dtype)
     factors = [jnp.asarray(f) for f in dist.init_factors(ft, rt, seed=seed)]
     lam = jnp.ones((rank,), jnp.float32)
     sweep = make_als_sweep(rt, mesh, backend=backend)

@@ -8,8 +8,10 @@ This is Alg. 2 (Dynasor) on a JAX device mesh:
   * the per-device mode step is gather → Hadamard → segment-scatter
     (``ref``/``segsum`` backends) or the Pallas blocked kernel
     (``pallas`` materialized / ``pallas_fused`` N-mode fused /
-    ``pallas_fused_tiled`` rank-slabbed / ``pallas_fused_bf16`` /
-    ``auto`` dispatch — decision matrix in ``docs/kernels.md``);
+    ``pallas_fused_tiled`` rank-slabbed / ``pallas_fused_gather`` and
+    its tiled composition, which gather the factor rows *inside* the
+    kernel / the bf16-gather variants / ``auto`` dispatch — decision
+    matrix in ``docs/kernels.md``);
   * **owner-computes means the output factor needs no psum** — only an
     all_gather to re-replicate it for later modes (on CPU this was "write
     once to shared DRAM");
@@ -63,8 +65,9 @@ class ModePlan(NamedTuple):
     blk: int                    # Pallas nonzero block for this mode
     tile_rows: int              # Pallas output row tile for this mode
     # Rank slabs the fused kernel iterates for this mode: padded_rank /
-    # RANK_SLAB when backend is pallas_fused_tiled, else 1 (the whole
-    # padded rank is one resident slab). Pure metadata for traffic
+    # RANK_SLAB when backend is one of the rank-slabbed kernels
+    # (pallas_fused_tiled / pallas_fused_gather_tiled), else 1 (the
+    # whole padded rank is one resident slab). Pure metadata for traffic
     # accounting / benches — the kernel derives its own grid from shapes.
     rank_slabs: int = 1
 
@@ -135,7 +138,7 @@ class DynasorRuntime:
         else:
             p = ModePlan(backend, self.blk, self.tile_rows)
         slabs = 1
-        if p.backend == "pallas_fused_tiled":
+        if p.backend in ("pallas_fused_tiled", "pallas_fused_gather_tiled"):
             slabs = kops.padded_rank(self.rank) // kops.MXU_RANK_MULTIPLE
         return p._replace(rank_slabs=slabs)
 

@@ -129,15 +129,18 @@ def compact_sorted(payload_flat, mask_flat, sort_key, out_cap: int):
     return jnp.take(payload_flat, order, axis=0), jnp.take(mask_flat, order)
 
 
-def remap_local(ft: FlycooTensor, from_mode: int, to_mode: int,
-                idx: np.ndarray, val: np.ndarray, mask: np.ndarray):
-    """Single-worker reference remap (numpy): re-bucket packed arrays.
+def remap_local(ft: FlycooTensor, to_mode: int):
+    """Single-worker reference remap (numpy): the post-remap layout oracle.
 
-    Oracle for the distributed remap round-trip test: the distributed
-    all_to_all remap of ``pack_mode(ft, from_mode)`` must equal
-    ``pack_mode(ft, to_mode)`` up to padding.
+    The distributed all_to_all remap of ``pack_mode(ft, from_mode)``
+    must equal ``pack_mode(ft, to_mode)`` up to padding — and since the
+    FLYCOO preprocessing already knows every mode's packed layout, the
+    oracle *is* ``pack_mode(ft, to_mode)``. The signature says exactly
+    that: no source-layout arguments, because the expected result does
+    not depend on them (an earlier version accepted and silently
+    ignored ``from_mode``/``idx``/``val``/``mask``, which misstated the
+    contract).
     """
     from .flycoo import pack_mode  # local import to avoid cycle at import time
 
-    del from_mode, idx, val, mask
     return pack_mode(ft, to_mode)

@@ -39,6 +39,22 @@ Kernel matrix (see ops.py for the dispatch layer that picks between them):
                               slab — the only extra cost).
   ``fused_mttkrp_3mode``      back-compat wrapper: the 3-mode (two input
                               factors) special case of the N-mode kernel.
+  ``fused_mttkrp_nmode_gather``  gather **inside the kernel**: takes the
+                              full replicated factor matrices (VMEM-resident
+                              across grid steps) plus a block-aligned
+                              ``(n_pad, N−1)`` int32 index stream, and forms
+                              each nonzero's factor rows with ``jnp.take``
+                              in the body. The gathered operands never
+                              exist in HBM at all — the per-nonzero stream
+                              shrinks from ``(N−1)·R̂·4`` B of rows to
+                              ``(N−1)·4`` B of indices.
+  ``fused_mttkrp_nmode_gather_tiled``  the in-kernel gather composed with
+                              the rank-slab grid axis: only one
+                              ``RANK_SLAB``-wide column slab of each factor
+                              is resident per slab pass, so the resident
+                              set is ``ΣI_pad·RANK_SLAB·gi`` instead of
+                              ``ΣI_pad·R̂·gi`` (the index/scalar streams are
+                              re-read once per slab).
   ==========================  =============================================
 
 Both fused kernels accept bf16 factor-row operands (``ops.py``'s
@@ -66,9 +82,13 @@ __all__ = [
     "segment_accumulate",
     "fused_mttkrp_nmode",
     "fused_mttkrp_nmode_tiled",
+    "fused_mttkrp_nmode_gather",
+    "fused_mttkrp_nmode_gather_tiled",
     "fused_mttkrp_3mode",
     "fused_vmem_bytes",
     "fused_tiled_vmem_bytes",
+    "gather_vmem_bytes",
+    "gather_tiled_vmem_bytes",
 ]
 
 # MXU lane width: the rank dimension is padded to a multiple of this for the
@@ -84,24 +104,33 @@ RANK_SLAB = MXU_RANK_MULTIPLE
 
 def fused_vmem_bytes(num_in_modes: int, rank_padded: int, blk: int,
                      tile_rows: int, itemsize: int = 4,
-                     gather_itemsize: int | None = None) -> int:
+                     gather_itemsize: int | None = None,
+                     index_stream_modes: int = 0) -> int:
     """VMEM working set of one ``fused_mttkrp_nmode`` grid step.
 
     N−1 gathered factor-row blocks + the in-register ``contrib`` block +
     the one-hot scatter matrix + the resident output tile + the scalar
-    streams (values, local rows). ops.py's ``auto`` dispatch compares this
-    against the per-core VMEM budget.
+    streams. ops.py's ``auto`` dispatch compares this against the
+    per-core VMEM budget.
 
     ``gather_itemsize`` sizes only the gathered factor-row blocks (2 for
     the bf16-gather variant); contrib / one-hot / out tile always
     accumulate at ``itemsize`` (fp32).
+
+    The scalar-stream term is explicit about its members: the fp32
+    values block and the int32 local-row block (both 4 B/element, hence
+    ``2·blk·4``), plus — for the gather-in-kernel family, which streams
+    its factor indices instead of pre-gathered rows —
+    ``index_stream_modes`` int32 index blocks of ``blk`` elements each
+    (``index_stream_modes = N−1``; 0 for the kernels whose operands are
+    already gathered).
     """
     gi = itemsize if gather_itemsize is None else gather_itemsize
     factor_blocks = num_in_modes * blk * rank_padded * gi
     contrib_block = blk * rank_padded * itemsize
     onehot = blk * tile_rows * itemsize
     out_tile = tile_rows * rank_padded * itemsize
-    scalars = 2 * blk * itemsize
+    scalars = (2 + index_stream_modes) * blk * itemsize
     return factor_blocks + contrib_block + onehot + out_tile + scalars
 
 
@@ -119,6 +148,41 @@ def fused_tiled_vmem_bytes(num_in_modes: int, rank_padded: int, blk: int,
     return fused_vmem_bytes(
         num_in_modes, min(rank_padded, rank_slab), blk, tile_rows,
         itemsize=itemsize, gather_itemsize=gather_itemsize)
+
+
+def gather_vmem_bytes(num_in_modes: int, rank_padded: int, blk: int,
+                      tile_rows: int, factor_rows: int, itemsize: int = 4,
+                      gather_itemsize: int | None = None) -> int:
+    """VMEM working set of one ``fused_mttkrp_nmode_gather`` grid step.
+
+    The replicated input-factor matrices themselves are the resident
+    operands (``factor_rows`` = Σ I_pad over the N−1 input modes), and
+    the per-nonzero streams are scalars only: values, local rows, and
+    one int32 factor index per input mode. ``gather_itemsize`` sizes the
+    resident matrices (2 for bf16 gathers); contrib / one-hot / out tile
+    always accumulate at ``itemsize`` (fp32).
+    """
+    gi = itemsize if gather_itemsize is None else gather_itemsize
+    resident_factors = factor_rows * rank_padded * gi
+    return resident_factors + fused_vmem_bytes(
+        0, rank_padded, blk, tile_rows, itemsize=itemsize,
+        index_stream_modes=num_in_modes)
+
+
+def gather_tiled_vmem_bytes(num_in_modes: int, rank_padded: int, blk: int,
+                            tile_rows: int, factor_rows: int,
+                            rank_slab: int = RANK_SLAB, itemsize: int = 4,
+                            gather_itemsize: int | None = None) -> int:
+    """VMEM working set of one ``fused_mttkrp_nmode_gather_tiled`` step.
+
+    :func:`gather_vmem_bytes` with the rank axis clamped to one slab:
+    only a ``rank_slab``-wide column slab of each factor matrix is
+    resident per slab pass, so very large R cannot push the resident
+    factors past the budget — only very large factor dimensions can.
+    """
+    return gather_vmem_bytes(
+        num_in_modes, min(rank_padded, rank_slab), blk, tile_rows,
+        factor_rows, itemsize=itemsize, gather_itemsize=gather_itemsize)
 
 
 def _scatter_update(rows, contrib, tile_rows: int):
@@ -379,6 +443,209 @@ def fused_mttkrp_nmode_tiled(
         input_output_aliases={3 + n_in: 0},
         interpret=interpret,
     )(tile_of_block, local_row_in_tile, vals, *factor_rows, out_init)
+
+
+def _fused_gather_body(*refs, tile_rows: int):
+    """In-kernel gather + Hadamard + scatter (Alg. 2 lines 13-25 whole).
+
+    Ref layout (positional, after scalar prefetch): ``tile_ref, row_ref,
+    val_ref, idx_ref, factors_0 … factors_{K-1}, init_ref, out_ref``.
+    Unlike :func:`_fused_nmode_body`, the factor refs here are the
+    (replicated, VMEM-resident) factor *matrices*, not pre-gathered row
+    blocks: each nonzero's rows are formed by ``jnp.take`` on its int32
+    index stream inside the body, so the gathered operands never touch
+    HBM. The factor refs may be bf16 (bf16-gather variants); ``contrib``
+    starts fp32 so every product accumulates at fp32.
+
+    The same body serves the factor-resident and the rank-slabbed
+    kernel: the BlockSpecs decide whether a factor ref covers the full
+    padded rank or one ``RANK_SLAB`` column slab.
+    """
+    tile_ref, row_ref, val_ref, idx_ref = refs[0], refs[1], refs[2], refs[3]
+    factor_refs = refs[4:-2]
+    init_ref, out_ref = refs[-2], refs[-1]
+    del tile_ref, init_ref
+    rows = row_ref[...]
+    idx = idx_ref[...]
+    contrib = val_ref[...][:, None].astype(jnp.float32)
+    for w, f_ref in enumerate(factor_refs):
+        contrib = contrib * jnp.take(f_ref[...], idx[:, w], axis=0)
+    update = _scatter_update(rows, contrib, tile_rows)
+    out_ref[...] += update.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("rows_cap", "blk", "tile_rows", "interpret")
+)
+def fused_mttkrp_nmode_gather(
+    vals,
+    idx_stream,
+    factors,
+    local_row_in_tile,
+    tile_of_block,
+    *,
+    rows_cap: int,
+    blk: int = 512,
+    tile_rows: int = 128,
+    interpret: bool = True,
+):
+    """Factor-resident in-kernel gather variant of the fused kernel.
+
+    Where :func:`fused_mttkrp_nmode` receives N−1 HBM-materialized
+    gathered row blocks (``(N−1)·R̂·4`` B written *and* re-read per
+    nonzero by the caller), this kernel receives the replicated factor
+    matrices whole — held in VMEM across every grid step via a
+    constant-index BlockSpec — plus a block-aligned int32 index stream,
+    and performs the gather in the body. The per-nonzero HBM stream is
+    ``(N−1)·4`` B of indices.
+
+    Args:
+      vals: ``(num_blocks*blk,)`` block-aligned nonzero values; padding 0.
+      idx_stream: ``(num_blocks*blk, K)`` int32, K = N−1 input modes —
+        the factor row index of each nonzero per input mode, in the same
+        order as ``factors``; padding slots point at row 0 (harmless:
+        their value is 0).
+      factors: tuple/list of K ``(I_pad_w, R)`` replicated input-factor
+        matrices (the output mode's factor is *not* passed). R identical
+        across operands, a multiple of ``MXU_RANK_MULTIPLE`` (ops.py
+        pads). fp32 or bf16 — the Hadamard always accumulates at fp32.
+      local_row_in_tile: ``(num_blocks*blk,)`` int32 row within its tile.
+      tile_of_block: ``(num_blocks,)`` int32 output tile per block,
+        non-decreasing.
+      rows_cap: total output rows (multiple of tile_rows).
+
+    Returns:
+      ``(rows_cap, R)`` float32 accumulated output.
+    """
+    factors = tuple(factors)
+    assert factors, "need at least one input-factor matrix"
+    n_pad, n_in = idx_stream.shape
+    assert n_in == len(factors), (n_in, len(factors))
+    rank = factors[0].shape[1]
+    for f in factors:
+        assert f.shape[1] == rank, (f.shape, rank)
+    assert n_pad % blk == 0, (n_pad, blk)
+    assert rows_cap % tile_rows == 0, (rows_cap, tile_rows)
+    num_blocks = n_pad // blk
+
+    in_specs = (
+        [
+            pl.BlockSpec((blk,), lambda b, tiles: (b,)),           # local_row
+            pl.BlockSpec((blk,), lambda b, tiles: (b,)),           # vals
+            pl.BlockSpec((blk, n_in), lambda b, tiles: (b, 0)),    # idx stream
+        ]
+        + [
+            # Whole replicated factor matrix, block index pinned at the
+            # origin: resident in VMEM for the entire grid sweep.
+            pl.BlockSpec(f.shape, lambda b, tiles: (0, 0))
+            for f in factors
+        ]
+        + [
+            pl.BlockSpec((tile_rows, rank),
+                         lambda b, tiles: (tiles[b], 0)),          # out_init
+        ]
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_blocks,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tile_rows, rank),
+                               lambda b, tiles: (tiles[b], 0)),
+    )
+    out_init = jnp.zeros((rows_cap, rank), dtype=jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_fused_gather_body, tile_rows=tile_rows),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows_cap, rank), jnp.float32),
+        # out_init -> out; operand index counts prefetch + row/val/idx +
+        # the K factor matrices.
+        input_output_aliases={4 + n_in: 0},
+        interpret=interpret,
+    )(tile_of_block, local_row_in_tile, vals, idx_stream, *factors, out_init)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows_cap", "blk", "tile_rows", "rank_slab",
+                     "interpret"),
+)
+def fused_mttkrp_nmode_gather_tiled(
+    vals,
+    idx_stream,
+    factors,
+    local_row_in_tile,
+    tile_of_block,
+    *,
+    rows_cap: int,
+    blk: int = 512,
+    tile_rows: int = 128,
+    rank_slab: int = RANK_SLAB,
+    interpret: bool = True,
+):
+    """Slab-streamed in-kernel gather: one rank slab of each factor resident.
+
+    Same contract as :func:`fused_mttkrp_nmode_gather` with R required to
+    be a multiple of ``rank_slab`` (ops.py's ``pad_rank`` guarantees it).
+    The grid gains a *major* axis over rank slabs, exactly like
+    :func:`fused_mttkrp_nmode_tiled`:
+
+        grid = (R // rank_slab, num_blocks)
+
+    and each factor's BlockSpec selects the slab's column window of the
+    matrix, so the resident set per step is ``ΣI_pad·rank_slab·gi``
+    instead of ``ΣI_pad·R̂·gi`` — huge ranks no longer force the factors
+    out of VMEM. The block axis stays minor (FLYCOO sort-order
+    invariant); cost of slabbing: the scalar + index streams are re-read
+    once per slab (``(2+K)·4`` B per nonzero per slab), still a factor
+    ``R̂/rank_slab`` smaller than streaming pre-gathered rows.
+    """
+    factors = tuple(factors)
+    assert factors, "need at least one input-factor matrix"
+    n_pad, n_in = idx_stream.shape
+    assert n_in == len(factors), (n_in, len(factors))
+    rank = factors[0].shape[1]
+    for f in factors:
+        assert f.shape[1] == rank, (f.shape, rank)
+    assert n_pad % blk == 0, (n_pad, blk)
+    assert rank % rank_slab == 0, (rank, rank_slab)
+    assert rows_cap % tile_rows == 0, (rows_cap, tile_rows)
+    num_blocks = n_pad // blk
+    num_slabs = rank // rank_slab
+
+    in_specs = (
+        [
+            pl.BlockSpec((blk,), lambda s, b, tiles: (b,)),        # local_row
+            pl.BlockSpec((blk,), lambda s, b, tiles: (b,)),        # vals
+            pl.BlockSpec((blk, n_in), lambda s, b, tiles: (b, 0)),  # idx
+        ]
+        + [
+            # One rank slab of the whole factor matrix per slab pass.
+            pl.BlockSpec((f.shape[0], rank_slab),
+                         lambda s, b, tiles: (0, s))
+            for f in factors
+        ]
+        + [
+            pl.BlockSpec((tile_rows, rank_slab),
+                         lambda s, b, tiles: (tiles[b], s)),       # out_init
+        ]
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_slabs, num_blocks),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tile_rows, rank_slab),
+                               lambda s, b, tiles: (tiles[b], s)),
+    )
+    out_init = jnp.zeros((rows_cap, rank), dtype=jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_fused_gather_body, tile_rows=tile_rows),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows_cap, rank), jnp.float32),
+        # out_init -> out; operand index counts prefetch + row/val/idx +
+        # the K factor matrices.
+        input_output_aliases={4 + n_in: 0},
+        interpret=interpret,
+    )(tile_of_block, local_row_in_tile, vals, idx_stream, *factors, out_init)
 
 
 def fused_mttkrp_3mode(

@@ -6,17 +6,20 @@ tile — the runtime equivalent of FLYCOO's shard/super-shard alignment), then
 ``mttkrp_device_step`` runs gather → (fused) Hadamard → blocked scatter.
 
 The runnable backends are the :data:`BACKENDS` tuple (``ref`` / ``pallas``
-/ ``pallas_fused`` / ``pallas_fused_tiled`` / ``pallas_fused_bf16``), plus
-``auto`` which resolves through :func:`select_backend`. **The full backend
-decision matrix — per-backend traffic/VMEM characteristics, the working-set
-formulas, and worked ``auto`` examples — lives in ``docs/kernels.md``;**
-this module deliberately doesn't duplicate that table. Short version:
-``auto`` picks the cheapest numerics-preserving path that fits the VMEM
-budget (fused → rank-tiled fused → materialized, with a segment-sum ``ref``
-below the MXU-padding rank threshold); ``pallas_fused_bf16`` (bf16 gathers,
-fp32 accumulate — halves gather traffic, ≈(N−1)·2⁻⁸ rel. error) is opt-in
-only
-and never chosen by ``auto``.
+/ ``pallas_fused`` / ``pallas_fused_tiled`` / ``pallas_fused_bf16`` /
+``pallas_fused_gather`` / ``pallas_fused_gather_tiled`` /
+``pallas_fused_gather_bf16``), plus ``auto`` which resolves through
+:func:`select_backend`. **The full backend decision matrix — per-backend
+traffic/VMEM characteristics, the working-set formulas, and worked
+``auto`` examples — lives in ``docs/kernels.md``;** this module
+deliberately doesn't duplicate that table. Short version: ``auto`` picks
+the cheapest numerics-preserving path that fits the VMEM budget
+(in-kernel gather → fused → rank-tiled → materialized, with a
+segment-sum ``ref`` below the MXU-padding rank threshold; the gather
+family needs the factor sizes — ``factor_rows`` — to be considered);
+the bf16-gather variants (bf16 gathers, fp32 accumulate — halve gather
+traffic, ≈(N−1)·2⁻⁸ rel. error) are opt-in only and never chosen by
+``auto``.
 
 (The plain-XLA ``segsum`` backend used by dry-runs lives one level up in
 ``core.distributed.device_mttkrp`` — it never reaches this module.)
@@ -37,10 +40,12 @@ from . import ref as _ref
 __all__ = [
     "BACKENDS",
     "AUTO_BACKENDS",
+    "GATHER_BACKENDS",
     "MIN_MXU_RANK",
     "MXU_RANK_MULTIPLE",
     "build_block_layout",
     "fused_fits_vmem",
+    "gather_fits_vmem",
     "mttkrp_blocked",
     "mttkrp_device_step",
     "pad_rank",
@@ -72,14 +77,22 @@ BACKENDS = (
     "pallas_fused",
     "pallas_fused_tiled",
     "pallas_fused_bf16",
+    "pallas_fused_gather",
+    "pallas_fused_gather_tiled",
+    "pallas_fused_gather_bf16",
 )
 
 # What ``auto`` may resolve to (statically or via a calibration table):
-# every BACKENDS member that preserves fp32 numerics. ``pallas_fused_bf16``
-# trades accuracy for gather traffic and must be requested explicitly
-# (backend string or DynasorRuntime.gather_dtype) — a timing table must
-# never silently change numerics.
+# every BACKENDS member that preserves fp32 numerics. The bf16-gather
+# variants trade accuracy for gather traffic and must be requested
+# explicitly (backend string or DynasorRuntime.gather_dtype) — a timing
+# table must never silently change numerics.
 AUTO_BACKENDS = tuple(b for b in BACKENDS if not b.endswith("_bf16"))
+
+# The in-kernel gather family mttkrp_device_step runs through the
+# gather kernels (after the *_bf16 name is folded into gather_dtype):
+# these skip the HBM materialization of gathered factor rows entirely.
+GATHER_BACKENDS = ("pallas_fused_gather", "pallas_fused_gather_tiled")
 
 
 def pad_rank(x, multiple: int = MXU_RANK_MULTIPLE):
@@ -116,6 +129,26 @@ def fused_fits_vmem(nmodes: int, rank: int, blk: int, tile_rows: int,
     return fused_bytes <= vmem_budget
 
 
+def gather_fits_vmem(nmodes: int, rank: int, blk: int, tile_rows: int,
+                     factor_rows: int, vmem_budget: int = VMEM_BUDGET_BYTES,
+                     *, tiled: bool = False,
+                     gather_itemsize: int = 4) -> bool:
+    """Hard feasibility of the in-kernel gather family.
+
+    ``factor_rows`` is the total row count of the N−1 replicated
+    input-factor matrices (Σ I_pad over non-output modes) — the resident
+    operand the gather kernels hold in VMEM. ``tiled=True`` budgets one
+    ``RANK_SLAB``-wide column slab of each factor instead of the full
+    padded rank (the slab-streamed regime); ``gather_itemsize=2`` sizes
+    the bf16-gather variants.
+    """
+    fn = (_kernel.gather_tiled_vmem_bytes if tiled
+          else _kernel.gather_vmem_bytes)
+    gather_bytes = fn(nmodes - 1, padded_rank(rank), blk, tile_rows,
+                      factor_rows, gather_itemsize=gather_itemsize)
+    return gather_bytes <= vmem_budget
+
+
 def select_backend(
     backend: str,
     *,
@@ -125,8 +158,18 @@ def select_backend(
     tile_rows: int = 128,
     vmem_budget: int = VMEM_BUDGET_BYTES,
     table=None,
+    factor_rows: int | None = None,
 ) -> str:
     """Resolve ``auto`` to a concrete backend; pass others through.
+
+    ``factor_rows`` is the total row count of the N−1 replicated
+    input-factor matrices (Σ I_pad over non-output modes) — the
+    information the in-kernel gather family's VMEM predicate needs.
+    ``None`` means the caller doesn't know the factor sizes (a purely
+    shape-keyed dispatch query), and the gather family is then never
+    chosen: its feasibility cannot be certified. ``mttkrp_device_step``
+    always passes it, so end-to-end ``auto`` prefers the gather family
+    whenever it fits.
 
     When a calibration ``table`` (a ``repro.tune`` ``CalibrationTable``
     or ``CostModel`` — anything with a ``best_backend`` method) is
@@ -137,12 +180,13 @@ def select_backend(
     decision applies, bit-identical to the no-table path. Two hard
     constraints bound the table, preference never overrides them:
 
-      * VMEM feasibility — a table answer of ``pallas_fused`` (or
-        ``pallas_fused_tiled``) whose working set exceeds
-        ``vmem_budget`` (an extrapolation beyond the measured grid) is
-        discarded and the static decision applies;
+      * VMEM feasibility — a table answer of ``pallas_fused`` /
+        ``pallas_fused_tiled`` whose working set exceeds ``vmem_budget``,
+        or of a gather backend whose resident-factor set does (or whose
+        ``factor_rows`` is unknown), is an extrapolation beyond the
+        measured grid: it is discarded and the static decision applies;
       * numerics — the table is only consulted over :data:`AUTO_BACKENDS`,
-        so a measured-fast ``pallas_fused_bf16`` never changes results
+        so a measured-fast bf16-gather variant never changes results
         behind ``auto``'s back.
 
     Static decision, in order (all static — safe to call under jit
@@ -150,14 +194,24 @@ def select_backend(
       1. ``rank < MIN_MXU_RANK`` → ``ref``: the MXU one-hot scatter pads R
          to ``MXU_RANK_MULTIPLE``, so ≥ 16× of every matmul is padding;
          plain segment-sum wins.
-      2. fused VMEM working set (N−1 gathered factor blocks + contrib +
+      2. the replicated factor matrices fit VMEM whole
+         (``kernel.gather_vmem_bytes``, needs ``factor_rows``) →
+         ``pallas_fused_gather``: the gather happens in-kernel, the
+         per-nonzero operand stream is ``(N−1)·4`` B of indices instead
+         of ``(N−1)·R̂·4`` B of materialized rows.
+      3. one ``RANK_SLAB`` column slab of each factor fits
+         (``kernel.gather_tiled_vmem_bytes``) →
+         ``pallas_fused_gather_tiled``: in-kernel gather, slab-streamed —
+         index/scalar streams re-read once per slab.
+      4. fused VMEM working set (N−1 gathered factor blocks + contrib +
          one-hot + out tile, see ``kernel.fused_vmem_bytes``) fits the
-         budget → ``pallas_fused``: minimum HBM traffic.
-      3. the *rank-tiled* fused working set (one ``RANK_SLAB`` slab, see
+         budget → ``pallas_fused``: gathered rows are materialized in
+         HBM, but contrib never is.
+      5. the *rank-tiled* fused working set (one ``RANK_SLAB`` slab, see
          ``kernel.fused_tiled_vmem_bytes``) fits → ``pallas_fused_tiled``:
          same gather/scatter traffic as fused, slab-resident — this is
          what removed the old large-R cliff onto the materialized path.
-      4. otherwise → ``pallas``: materialize contrib in HBM, keeping only
+      6. otherwise → ``pallas``: materialize contrib in HBM, keeping only
          one block in VMEM per grid step (only reachable with extreme
          ``blk``/``tile_rows``, since the slabbed working set no longer
          grows with R).
@@ -187,10 +241,22 @@ def select_backend(
                     nmodes, rank, blk, tile_rows, vmem_budget,
                     tiled=choice == "pallas_fused_tiled"):
             choice = None               # infeasible extrapolation
+        elif choice in GATHER_BACKENDS and (
+                factor_rows is None or not gather_fits_vmem(
+                    nmodes, rank, blk, tile_rows, factor_rows, vmem_budget,
+                    tiled=choice == "pallas_fused_gather_tiled")):
+            choice = None               # factor residency not certifiable
         if choice is not None:
             return choice
     if rank < MIN_MXU_RANK:
         return "ref"
+    if factor_rows is not None:
+        if gather_fits_vmem(nmodes, rank, blk, tile_rows, factor_rows,
+                            vmem_budget):
+            return "pallas_fused_gather"
+        if gather_fits_vmem(nmodes, rank, blk, tile_rows, factor_rows,
+                            vmem_budget, tiled=True):
+            return "pallas_fused_gather_tiled"
     if fused_fits_vmem(nmodes, rank, blk, tile_rows, vmem_budget):
         return "pallas_fused"
     if fused_fits_vmem(nmodes, rank, blk, tile_rows, vmem_budget,
@@ -322,10 +388,12 @@ def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
         ``docs/kernels.md``).
       gather_dtype: ``"float32"`` | ``"bfloat16"`` — dtype the fused
         family gathers factor rows in (the accumulate is always fp32).
-        ``"bfloat16"`` composes with any fused backend; the
-        ``pallas_fused_bf16`` backend name is the untiled fused kernel
-        with this forced on (so a plain backend-string API can reach it).
-        The materialized/``ref`` paths ignore it.
+        ``"bfloat16"`` composes with any fused backend (in-kernel gather
+        included: the resident factor matrices are held in bf16); the
+        ``pallas_fused_bf16`` / ``pallas_fused_gather_bf16`` backend
+        names are the untiled kernels with this forced on (so a plain
+        backend-string API can reach them). The materialized/``ref``
+        paths ignore it.
 
     Returns ``(rows_cap, R)`` float32 local output factor rows.
     """
@@ -337,22 +405,53 @@ def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
             "'float32' or 'bfloat16'")
     nmodes = idx.shape[1]
     rank = factors[mode].shape[-1]
+    in_modes = [w for w in range(nmodes) if w != mode]
     backend = select_backend(
-        backend, nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows
+        backend, nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows,
+        factor_rows=sum(factors[w].shape[0] for w in in_modes),
     )
     if backend == "pallas_fused_bf16":
         backend, gather_dtype = "pallas_fused", "bfloat16"
+    if backend == "pallas_fused_gather_bf16":
+        backend, gather_dtype = "pallas_fused_gather", "bfloat16"
     local_row = (idx[:, mode] - row_offset).astype(jnp.int32)
     local_row = jnp.where(valid, local_row, 0)
 
-    in_modes = [w for w in range(nmodes) if w != mode]
-    if backend in ("pallas_fused", "pallas_fused_tiled"):
+    if backend in GATHER_BACKENDS + ("pallas_fused", "pallas_fused_tiled"):
         gdt = jnp.bfloat16 if gather_dtype == "bfloat16" else jnp.float32
         vals = jnp.where(valid, val, 0.0)
         n_pad = n_pad_for(local_row.shape[0], rows_cap, blk, tile_rows)
         slot, tile_of_block = build_block_layout(
             local_row, valid, rows_cap=rows_cap, blk=blk, tile_rows=tile_rows
         )
+        v_al = _align_to_blocks(vals, slot, n_pad)
+        r_al = _align_to_blocks(
+            (local_row % tile_rows).astype(jnp.int32), slot, n_pad
+        )
+        if backend in GATHER_BACKENDS:
+            # In-kernel gather: no per-factor take, no _align_to_blocks
+            # of R-wide rows — only the int32 index stream is
+            # block-aligned, and the replicated factor matrices go to
+            # the kernel whole. Padding/invalid slots point at factor
+            # row 0 (in-bounds gather; their value is 0 so the
+            # contribution vanishes). Casting the resident matrices to
+            # the gather dtype is what halves both the VMEM residency
+            # and the factor-load traffic for bf16 (same values as the
+            # materialized path's cast-then-take).
+            idx_in = jnp.stack([idx[:, w] for w in in_modes], axis=1)
+            idx_in = jnp.where(valid[:, None], idx_in, 0).astype(jnp.int32)
+            idx_al = _align_to_blocks(idx_in, slot, n_pad)
+            fmats = tuple(pad_rank(factors[w].astype(gdt))
+                          for w in in_modes)
+            kern = (_kernel.fused_mttkrp_nmode_gather_tiled
+                    if backend == "pallas_fused_gather_tiled"
+                    else _kernel.fused_mttkrp_nmode_gather)
+            out = kern(
+                v_al, idx_al, fmats, r_al, tile_of_block,
+                rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
+                interpret=interpret,
+            )
+            return out[:, :rank]
         # Cast the factor *matrix* before the take so the gather itself
         # moves gather_dtype-sized rows (the traffic the bf16 variant
         # halves), not fp32 rows cast afterwards.
@@ -362,10 +461,6 @@ def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
                 slot, n_pad
             )
             for w in in_modes
-        )
-        v_al = _align_to_blocks(vals, slot, n_pad)
-        r_al = _align_to_blocks(
-            (local_row % tile_rows).astype(jnp.int32), slot, n_pad
         )
         kern = (_kernel.fused_mttkrp_nmode_tiled
                 if backend == "pallas_fused_tiled"

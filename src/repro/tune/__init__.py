@@ -7,8 +7,9 @@ replaces both with *measurements*:
 
   * :mod:`repro.tune.microbench` — times every backend (the
     ``kernels.mttkrp.ops.BACKENDS`` family — fused, rank-tiled fused,
-    bf16-gather fused, materialized, ref — plus ``segsum``) over a grid
-    of ``(nmodes, rank, blk, tile_rows, density)`` on the current host;
+    bf16-gather fused, the in-kernel-gather trio, materialized, ref —
+    plus ``segsum``) over a grid of ``(nmodes, rank, blk, tile_rows,
+    density)`` on the current host;
   * :mod:`repro.tune.table` — the versioned JSON calibration table
     those timings are saved into (``experiments/tune/``), with a
     registry that falls back deterministically to the static model when
@@ -47,13 +48,14 @@ Tuning workflow
 With ``table=None`` every decision is bit-identical to the static
 model, so untuned hosts behave exactly as before calibration.
 """
-from .microbench import BACKENDS, GridPoint, calibrate, default_grid
+from .microbench import (BACKENDS, GridPoint, calibrate, default_grid,
+                         stub_measure)
 from .model import CostModel, compare_dispatch, plan_modes
 from .table import (AUTO_BACKENDS, COMPAT_SCHEMA_VERSIONS, OPS_BACKENDS,
                     SCHEMA_VERSION, CalibrationEntry, CalibrationTable,
                     SchemaVersionError, aggregate_timings,
-                    default_table_path, find_table, load_table,
-                    measured_best)
+                    default_table_path, find_table, key_factor_rows,
+                    load_table, measured_best)
 
 __all__ = [
     "BACKENDS",
@@ -63,6 +65,8 @@ __all__ = [
     "GridPoint",
     "calibrate",
     "default_grid",
+    "stub_measure",
+    "key_factor_rows",
     "CostModel",
     "compare_dispatch",
     "plan_modes",

@@ -23,11 +23,15 @@ def _load(path: str | None) -> CalibrationTable | None:
 
 
 def cmd_calibrate(args) -> int:
+    measure = microbench.stub_measure if args.stub else None
     table = microbench.calibrate(quick=not args.full, seed=args.seed,
-                                 iters=args.iters, verbose=True)
+                                 iters=args.iters, measure=measure,
+                                 meta_extra=dict(stub=True) if args.stub
+                                 else None, verbose=True)
     path = args.out or default_table_path()
     table.save(path)
-    print(f"calibrated {len(table.entries)} grid points "
+    kind = "stubbed " if args.stub else ""
+    print(f"calibrated {len(table.entries)} {kind}grid points "
           f"({'full' if args.full else 'quick'} grid) -> {path}")
     return 0
 
@@ -42,9 +46,10 @@ def cmd_show(args) -> int:
     for k, v in sorted(table.meta.items()):
         print(f"meta.{k}={v}")
     if "upgraded_from_schema" in table.meta:
-        print("note: table pre-dates the current backend set "
-              "(pallas_fused_tiled / pallas_fused_bf16 unmeasured); "
-              "re-run `python -m repro.tune calibrate` to time them")
+        print("note: table pre-dates the current backend set (the "
+              "rank-tiled / bf16 / in-kernel-gather backends are "
+              "unmeasured and factor_rows is unrecorded); re-run "
+              "`python -m repro.tune calibrate` to time them")
     for key in table.shape_keys():
         nmodes, rank, blk, tile_rows = key
         agg = aggregate_timings(table, key)
@@ -68,7 +73,8 @@ def cmd_check(args) -> int:
         kw = dict(nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows)
         model_best = table.best_backend(**kw)
         want_model = measured_best(cmp["agg"])
-        fallback = kops.select_backend("auto", table=empty, **kw)
+        fallback = kops.select_backend(
+            "auto", table=empty, factor_rows=cmp["factor_rows"], **kw)
         ok = (model_best == want_model
               and cmp["calibrated"] == cmp["oracle"]
               and fallback == cmp["static"])
@@ -93,6 +99,9 @@ def main(argv=None) -> int:
                    help="small grid (default)")
     c.add_argument("--full", action="store_true",
                    help="full grid (slow in interpret mode)")
+    c.add_argument("--stub", action="store_true",
+                   help="deterministic traffic-model pseudo-timings "
+                        "instead of running kernels (CI schema/CLI smoke)")
     c.add_argument("--out", default=None,
                    help=f"output path (default {default_table_path()})")
     c.add_argument("--seed", type=int, default=0)

@@ -5,17 +5,21 @@ power-law-skewed nonzero stream of the requested density plus random
 factor matrices — timed through every backend:
 
   * the ``kernels.mttkrp.ops.BACKENDS`` family (``pallas_fused``,
-    ``pallas``, ``pallas_fused_tiled``, ``pallas_fused_bf16``, ``ref``)
-    via ``mttkrp_device_step`` (interpret mode on CPU — the timings rank
+    ``pallas``, ``pallas_fused_tiled``, ``pallas_fused_bf16``, the
+    in-kernel-gather ``pallas_fused_gather`` trio, ``ref``) via
+    ``mttkrp_device_step`` (interpret mode on CPU — the timings rank
     the backends' *emulated* cost; on a real TPU the same harness
     calibrates compiled kernels);
   * ``segsum`` — the plain-XLA segment-sum path used by
     ``core.distributed.device_mttkrp``.
 
-``pallas_fused_bf16`` timings are recorded like any other backend but
-the ``auto`` dispatch never follows them (numerics opt-in — see
+The bf16-gather timings are recorded like any other backend but the
+``auto`` dispatch never follows them (numerics opt-in — see
 ``ops.AUTO_BACKENDS``); they exist so ``repro.tune show`` / the bench
-suite can report what explicit bf16 opt-in would buy.
+suite can report what explicit bf16 opt-in would buy. Every v3 entry
+also records ``factor_rows`` (see :func:`case_factor_rows`) so the
+dispatch can certify the gather family's VMEM feasibility when
+following the table.
 
 The ``measure`` hook is injectable (``measure(backend, point) ->
 seconds``) so tests calibrate with deterministic stub timings and the
@@ -40,6 +44,8 @@ __all__ = [
     "GridPoint",
     "default_grid",
     "make_case",
+    "case_factor_rows",
+    "stub_measure",
     "calibrate",
 ]
 
@@ -103,6 +109,44 @@ def make_case(point: GridPoint, *, seed: int = 0):
     factors = [jnp.asarray(rng.standard_normal((d, point.rank)), jnp.float32)
                for d in dims]
     return idx, val, valid, factors, rows_cap
+
+
+def case_factor_rows(point: GridPoint) -> int:
+    """Total input-factor rows of :func:`make_case`'s synthetic case.
+
+    The non-output modes all have ``_SIDE_DIM`` rows, so this is the
+    resident set the in-kernel gather backends hold; it is recorded in
+    every v3 calibration entry so the dispatch can check gather
+    feasibility when following the table.
+    """
+    return (point.nmodes - 1) * _SIDE_DIM
+
+
+def stub_measure(backend: str, point: GridPoint) -> float:
+    """Deterministic pseudo-timings from the traffic model (no kernels run).
+
+    For schema/CLI smoke runs (``python -m repro.tune calibrate --stub``
+    in CI) and anywhere a full interpret-mode calibration is too slow:
+    the relative ordering mirrors the counted per-nonzero HBM traffic of
+    each backend (gather < fused < materialized, bf16 halving gather
+    bytes, segment-sum paths winning at small rank), so the resulting
+    table exercises exactly the production table/model/dispatch code
+    paths with self-consistent argmins.
+    """
+    k = (point.nmodes - 1) * point.rank * (1.0 + 0.1 * point.density)
+    return {
+        "ref": 8e-4 * point.rank,
+        "segsum": 6e-4 * point.rank,
+        "pallas": 0.05 + 2e-4 * k + 1e-5 * point.blk,
+        "pallas_fused": 0.09 + 7e-5 * k + 2e-5 * point.tile_rows,
+        "pallas_fused_tiled": 0.095 + 7e-5 * k + 2e-5 * point.tile_rows,
+        "pallas_fused_bf16": 0.04 + 4e-5 * k + 2e-5 * point.tile_rows,
+        "pallas_fused_gather": 0.07 + 5e-5 * k + 2e-5 * point.tile_rows,
+        "pallas_fused_gather_tiled":
+            0.075 + 5e-5 * k + 2e-5 * point.tile_rows,
+        "pallas_fused_gather_bf16":
+            0.03 + 3e-5 * k + 2e-5 * point.tile_rows,
+    }[backend]
 
 
 def _segsum_step(idx, val, valid, factors, rows_cap: int):
@@ -176,7 +220,7 @@ def calibrate(
         entries.append(CalibrationEntry(
             nmodes=point.nmodes, rank=point.rank, blk=point.blk,
             tile_rows=point.tile_rows, density=point.density,
-            timings_s=timings,
+            timings_s=timings, factor_rows=case_factor_rows(point),
         ))
         if verbose:
             best = entries[-1].best

@@ -30,18 +30,21 @@ import numpy as np
 from ..core.distributed import ModePlan
 from ..kernels.mttkrp.ops import (AUTO_BACKENDS, MIN_MXU_RANK,
                                   MXU_RANK_MULTIPLE, fused_fits_vmem,
-                                  padded_rank, select_backend)
+                                  gather_fits_vmem, padded_rank,
+                                  select_backend)
 
 __all__ = ["CostModel", "compare_dispatch", "plan_modes"]
 
 
 def _feasible(backends, nmodes: int, rank: int, blk: int, tile_rows: int,
-              *, covered: bool):
+              *, covered: bool, factor_rows: int | None = None):
     """Filter ``backends`` by the same hard constraints select_backend's
     table path applies: fused working sets must fit VMEM (per family —
-    untiled / rank-tiled / bf16-gather), and no MXU one-hot backend below
-    ``MIN_MXU_RANK`` unless that rank was actually measured
-    (``covered`` — below-grid extrapolation is not evidence)."""
+    untiled / rank-tiled / bf16-gather / in-kernel gather), and no MXU
+    one-hot backend below ``MIN_MXU_RANK`` unless that rank was actually
+    measured (``covered`` — below-grid extrapolation is not evidence).
+    The gather family additionally needs ``factor_rows`` (its resident
+    set is the factor matrices themselves); ``None`` rules it out."""
     out = []
     for b in backends:
         if rank < MIN_MXU_RANK and not covered and b.startswith("pallas"):
@@ -55,6 +58,12 @@ def _feasible(backends, nmodes: int, rank: int, blk: int, tile_rows: int,
         if b == "pallas_fused_bf16" and not fused_fits_vmem(
                 nmodes, rank, blk, tile_rows, gather_itemsize=2):
             continue
+        if b.startswith("pallas_fused_gather"):
+            if factor_rows is None or not gather_fits_vmem(
+                    nmodes, rank, blk, tile_rows, factor_rows,
+                    tiled=b.endswith("_tiled"),
+                    gather_itemsize=2 if b.endswith("_bf16") else 4):
+                continue
         out.append(b)
     return out
 
@@ -184,18 +193,25 @@ def compare_dispatch(table, key) -> dict:
     dispatch that must not change results); when the table timed none of
     them, the static rule *is* the standard (the table cannot answer).
     """
-    from .table import AUTO_BACKENDS, aggregate_timings, measured_best
+    from .table import (AUTO_BACKENDS, aggregate_timings, key_factor_rows,
+                        measured_best)
 
     nmodes, rank, blk, tile_rows = key
     agg = aggregate_timings(table, key)
-    kw = dict(nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows)
+    # The measured case's factor sizes (v3 entries) — without them the
+    # dispatch can't certify gather feasibility, so static/calibrated
+    # both stay off the gather family, exactly like a live dispatch
+    # whose caller doesn't know the factor shapes.
+    factor_rows = key_factor_rows(table, key)
+    kw = dict(nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows,
+              factor_rows=factor_rows)
     static = select_backend("auto", **kw)
     calibrated = select_backend("auto", table=table, **kw)
     oracle = measured_best(agg, allowed=AUTO_BACKENDS)
     if oracle is None:
         oracle = static
     return dict(agg=agg, static=static, calibrated=calibrated,
-                oracle=oracle)
+                oracle=oracle, factor_rows=factor_rows)
 
 
 def plan_modes(table, ft, rank: int, *,
@@ -223,6 +239,12 @@ def plan_modes(table, ft, rank: int, *,
     plans = []
     for n in range(ft.nmodes):
         rows_per_worker = max(1, ft.modes[n].rows_cap)
+        # Replicated input-factor rows this mode's gather kernel would
+        # hold resident (Σ i_pad over non-output modes; the final
+        # tile-rounding of rows_cap adds at most D·tile_rows per mode —
+        # noise against the VMEM budget).
+        factor_rows = sum(D * ft.modes[w].rows_cap
+                          for w in range(ft.nmodes) if w != n)
         best = None
         for blk, tile_rows in model.shape_candidates(ft.nmodes):
             num_tiles = max(1, -(-rows_per_worker // tile_rows))
@@ -237,7 +259,8 @@ def plan_modes(table, ft, rank: int, *,
             cand_allowed = _feasible(
                 cand_allowed, ft.nmodes, rank, blk, tile_rows,
                 covered=model.covers(nmodes=ft.nmodes, rank=rank, blk=blk,
-                                     tile_rows=tile_rows))
+                                     tile_rows=tile_rows),
+                factor_rows=factor_rows)
             choice = model.best_backend(
                 nmodes=ft.nmodes, rank=rank, blk=blk, tile_rows=tile_rows,
                 allowed=cand_allowed, density=density)
@@ -252,7 +275,8 @@ def plan_modes(table, ft, rank: int, *,
             return None
         _, blk, tile_rows, backend = best
         slabs = (padded_rank(rank) // MXU_RANK_MULTIPLE
-                 if backend == "pallas_fused_tiled" else 1)
+                 if backend in ("pallas_fused_tiled",
+                                "pallas_fused_gather_tiled") else 1)
         plans.append(ModePlan(backend=backend, blk=blk, tile_rows=tile_rows,
                               rank_slabs=slabs))
     return tuple(plans)

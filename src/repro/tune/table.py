@@ -21,6 +21,14 @@ Version history (full field reference in ``experiments/tune/README.md``):
     unchanged (``timings_s`` is an open backend→seconds map), so v1
     tables load under v2 — they simply carry no timings for the new
     backends and the model answers ``None`` for them.
+  * v3 — in-kernel gather backends (``pallas_fused_gather`` and its
+    tiled/bf16 compositions) join the measured set, and each entry
+    records ``factor_rows`` — the total input-factor rows of the
+    measured synthetic case — because the gather family's VMEM
+    feasibility depends on factor residency, not just the dispatch
+    shape key. v1/v2 tables load under v3 with ``factor_rows=None``
+    (and no gather timings), so the dispatch simply never follows the
+    table onto a gather backend for them.
 """
 from __future__ import annotations
 
@@ -42,16 +50,17 @@ __all__ = [
     "CalibrationEntry",
     "CalibrationTable",
     "aggregate_timings",
+    "key_factor_rows",
     "measured_best",
     "default_table_path",
     "find_table",
     "load_table",
 ]
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 # Older schema versions from_json still understands (upgraded on load).
-COMPAT_SCHEMA_VERSIONS = (1,)
+COMPAT_SCHEMA_VERSIONS = (1, 2)
 
 # Backends ``kernels.mttkrp.ops.mttkrp_device_step`` can run itself —
 # ``segsum`` dispatches one layer up (core.distributed.device_mttkrp).
@@ -80,6 +89,11 @@ class CalibrationEntry:
     tile_rows: int
     density: float               # mean nonzeros per (blk × row-tile) block
     timings_s: dict              # backend name -> median wall seconds
+    # Total input-factor rows (Σ I over non-output modes) of the measured
+    # case — what the in-kernel gather family's VMEM predicate needs.
+    # None on entries loaded from pre-v3 tables: the dispatch then never
+    # follows the table onto a gather backend for this key.
+    factor_rows: int | None = None
 
     @property
     def best(self) -> str:
@@ -96,16 +110,19 @@ class CalibrationEntry:
             nmodes=self.nmodes, rank=self.rank, blk=self.blk,
             tile_rows=self.tile_rows, density=self.density,
             timings_s={k: float(v) for k, v in self.timings_s.items()},
+            factor_rows=self.factor_rows,
         )
 
     @classmethod
     def from_json(cls, obj: dict) -> "CalibrationEntry":
+        factor_rows = obj.get("factor_rows")
         return cls(
             nmodes=int(obj["nmodes"]), rank=int(obj["rank"]),
             blk=int(obj["blk"]), tile_rows=int(obj["tile_rows"]),
             density=float(obj["density"]),
             timings_s={str(k): float(v)
                        for k, v in obj["timings_s"].items()},
+            factor_rows=None if factor_rows is None else int(factor_rows),
         )
 
 
@@ -212,6 +229,16 @@ def aggregate_timings(table: CalibrationTable, key) -> dict:
             for b in backends}
 
 
+def key_factor_rows(table: CalibrationTable, key) -> int | None:
+    """``factor_rows`` recorded at one dispatch key (``None`` on pre-v3
+    tables, or when the key was never measured) — the extra context the
+    gather family's VMEM feasibility needs beyond the shape key."""
+    for e in table.entries:
+        if e.shape_key == key and e.factor_rows is not None:
+            return int(e.factor_rows)
+    return None
+
+
 def measured_best(agg: dict, allowed=None) -> str | None:
     """Argmin backend among measured ones; ``None`` if none are eligible
     (e.g. a table calibrated on a backend subset disjoint from
@@ -271,9 +298,14 @@ def find_table(table_dir: str = DEFAULT_TABLE_DIR, *,
     Tables whose stored host fingerprint (machine / jax backend)
     contradicts the current host are skipped unless ``match_host=False``
     — calibrations are measurements of *a* machine and must not steer
-    another one. Returns ``None`` when the directory is missing or holds
-    no loadable matching table — the deterministic signal for consumers
-    to use the static VMEM-model dispatch unchanged.
+    another one. Tables stamped ``meta.stub`` (``calibrate --stub``
+    pseudo-timings for schema/CLI smoke runs) are *always* skipped: the
+    registry's contract is measured calibrations, and a stub saved to
+    the default path must not silently steer real dispatch; load them
+    by explicit path instead. Returns ``None`` when the directory is
+    missing or holds no loadable matching table — the deterministic
+    signal for consumers to use the static VMEM-model dispatch
+    unchanged.
     """
     paths = sorted(glob.glob(os.path.join(table_dir, "*.json")),
                    key=lambda p: (os.path.getmtime(p), p), reverse=True)
@@ -282,6 +314,8 @@ def find_table(table_dir: str = DEFAULT_TABLE_DIR, *,
             table = CalibrationTable.load(path)
         except (SchemaVersionError, json.JSONDecodeError, KeyError,
                 ValueError, OSError):
+            continue
+        if table.meta.get("stub"):
             continue
         if match_host and not _matches_host(table.meta):
             continue

@@ -1,5 +1,6 @@
 """Property-based Pallas kernel sweep: random shapes/blocks vs the oracle
-(per assignment: hypothesis sweeps for each Pallas kernel)."""
+(per assignment: hypothesis sweeps for each Pallas kernel), plus the
+``build_block_layout`` invariants every kernel's correctness rides on."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -73,3 +74,59 @@ def test_fused_3mode_property(seed, cap, rows_cap, rank):
                                   backend="pallas_fused", **kw)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_el=st.integers(1, 300),
+    tiles=st.integers(1, 6),
+    tile_rows=st.sampled_from([8, 16, 32]),
+    blk=st.sampled_from([16, 32, 64]),
+    frac_invalid=st.floats(0.0, 0.5),
+)
+def test_build_block_layout_invariants(seed, n_el, tiles, tile_rows, blk,
+                                       frac_invalid):
+    """The layout contract every Pallas kernel here relies on:
+
+      * valid elements get *injective* in-range slots; invalid elements
+        all land on the dump slot ``n_pad``;
+      * blocks are homogeneous per tile: a block never straddles an
+        output row tile (each tile's run starts on a block boundary);
+      * ``tile_of_block`` is non-decreasing and consistent with the
+        slots — every valid element's block is attributed to exactly
+        its own output tile.
+    """
+    rows_cap = tiles * tile_rows
+    rng = np.random.default_rng(seed)
+    row = np.sort(rng.integers(0, rows_cap, n_el)).astype(np.int32)
+    valid = np.ones(n_el, bool)
+    k = int(n_el * frac_invalid)
+    if k:
+        valid[-k:] = False          # invalid trail (FLYCOO pack invariant)
+    n_pad = kops.n_pad_for(n_el, rows_cap, blk, tile_rows)
+    slot, tile_of_block = kops.build_block_layout(
+        jnp.asarray(row), jnp.asarray(valid), rows_cap=rows_cap,
+        blk=blk, tile_rows=tile_rows)
+    slot = np.asarray(slot)
+    tile_of_block = np.asarray(tile_of_block)
+
+    assert tile_of_block.shape == (n_pad // blk,)
+    # invalid elements -> the dump slot, valid -> in-range
+    assert np.all(slot[~valid] == n_pad)
+    vslots = slot[valid]
+    assert np.all((0 <= vslots) & (vslots < n_pad))
+    # injectivity
+    assert len(np.unique(vslots)) == len(vslots)
+
+    vtile = row[valid] // tile_rows
+    # consistency: each element's block is attributed to its own tile
+    assert np.array_equal(tile_of_block[vslots // blk], vtile)
+    # block-aligned per tile: every tile's first slot is a block boundary
+    # and its elements occupy consecutive slots (sorted-run compaction)
+    for t in np.unique(vtile):
+        s = np.sort(vslots[vtile == t])
+        assert s[0] % blk == 0, (t, s[0])
+        assert np.array_equal(s, s[0] + np.arange(len(s)))
+    # non-decreasing tile per block
+    assert np.all(np.diff(tile_of_block) >= 0)

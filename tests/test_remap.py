@@ -69,3 +69,21 @@ def test_compact_sorted_orders_and_truncates():
     assert bool(omask.all())
     # sorted by key among valid: keys 1,3,4,5 -> rows 3,2,5,0
     assert np.array_equal(np.asarray(out[:, 0]), [6.0, 4.0, 10.0, 0.0])
+
+
+def test_remap_local_oracle_is_pack_mode_and_takes_no_source_layout():
+    import inspect
+
+    t = random_sparse_tensor((40, 30, 20), 400, seed=3,
+                             distribution="powerlaw")
+    ft = build_flycoo(t, 4, m_bounds=(4, 16), g_bounds=(8, 64))
+    for m in range(t.nmodes):
+        got = remap_lib.remap_local(ft, m)
+        want = pack_mode(ft, m)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    # Contract: the expected post-remap layout depends only on (ft,
+    # to_mode) — the oracle must not accept (and ignore) source-layout
+    # arguments.
+    assert list(inspect.signature(remap_lib.remap_local).parameters) == \
+        ["ft", "to_mode"]

@@ -25,19 +25,12 @@ _OPS_BACKENDS = kops.BACKENDS
 _AUTO_BACKENDS = kops.AUTO_BACKENDS
 
 
-def fake_measure(backend, p):
-    """Deterministic stub seconds with config-dependent crossovers."""
-    k = (p.nmodes - 1) * p.rank * (1.0 + 0.1 * p.density)
-    return {
-        "ref": 0.0008 * p.rank,
-        "segsum": 0.0006 * p.rank,
-        "pallas": 0.05 + 0.0002 * k + 1e-5 * p.blk,
-        "pallas_fused": 0.09 + 0.00007 * k + 2e-5 * p.tile_rows,
-        # slightly behind untiled at small rank (slab-loop overhead) ...
-        "pallas_fused_tiled": 0.095 + 0.00007 * k + 2e-5 * p.tile_rows,
-        # ... and bf16 always fastest, to prove auto still never picks it
-        "pallas_fused_bf16": 0.04 + 0.00004 * k + 2e-5 * p.tile_rows,
-    }[backend]
+# The production traffic-model stub (CI tune-smoke uses it via
+# `calibrate --stub`) doubles as the test fixture — one source for the
+# pseudo-timing crossovers: segsum/ref win at small rank, the in-kernel
+# gather family beats the materializing fused family, and the bf16
+# compositions are fastest overall (to prove auto never picks them).
+fake_measure = tune.stub_measure
 
 
 @pytest.fixture()
@@ -83,6 +76,21 @@ def test_find_table_skips_foreign_host(table, tmp_path):
     assert got is not None and got.entries == table.entries
     table.save(str(tmp_path / "local.json"))                # matching host
     assert tune.find_table(str(tmp_path)) is not None
+
+
+def test_find_table_never_serves_stub_tables(table, tmp_path):
+    """A `calibrate --stub` table saved to the registry path must not
+    silently steer real dispatch: its pseudo-timings are a schema/CLI
+    smoke artifact, loadable only by explicit path."""
+    stub = CalibrationTable(entries=list(table.entries),
+                            meta=dict(table.meta, stub=True))
+    path = stub.save(str(tmp_path / "stubbed.json"))
+    assert tune.find_table(str(tmp_path)) is None
+    assert tune.find_table(str(tmp_path), match_host=False) is None
+    assert tune.load_table(path).entries == table.entries  # explicit path ok
+    table.save(str(tmp_path / "real.json"))
+    found = tune.find_table(str(tmp_path))
+    assert found is not None and not found.meta.get("stub")
 
 
 def test_model_cache_invalidated_on_entry_change():
@@ -151,7 +159,10 @@ def test_off_grid_shape_resolves_to_nearest_group():
 
 def test_select_backend_matches_measured_argmin_on_grid(table):
     """Acceptance: table-driven auto == measured best on EVERY grid key
-    (argmin over the numerics-preserving AUTO_BACKENDS — never bf16)."""
+    (argmin over the numerics-preserving AUTO_BACKENDS — never bf16).
+    ``factor_rows`` comes from the measured case (as ``repro.tune
+    check`` supplies it), so a measured-fast gather backend is a
+    certifiable choice."""
     for key in table.shape_keys():
         n, r, b, t = key
         agg = {
@@ -161,7 +172,9 @@ def test_select_backend_matches_measured_argmin_on_grid(table):
         }
         want = min(sorted(_AUTO_BACKENDS), key=lambda bk: (agg[bk], bk))
         got = kops.select_backend("auto", nmodes=n, rank=r, blk=b,
-                                  tile_rows=t, table=table)
+                                  tile_rows=t, table=table,
+                                  factor_rows=tune.key_factor_rows(
+                                      table, key))
         assert got == want, (key, got, want)
 
 
