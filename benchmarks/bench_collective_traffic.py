@@ -21,7 +21,7 @@ import os
 import subprocess
 import sys
 
-from .common import row
+from .common import row, write_bench_json
 
 _SCRIPT = r"""
 import os
@@ -91,4 +91,5 @@ def run(quick: bool = True, rank: int = 64):
     if not rows:
         rows = [row("collective_traffic", status="error",
                     stderr=proc.stderr[-300:])]
+    write_bench_json("collective_traffic", rows)
     return rows

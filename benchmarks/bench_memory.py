@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.core.tensors import FROSTT_PROFILES
 
-from .common import row
+from .common import row, write_bench_json
 
 GB = 1024 ** 3
 
@@ -44,4 +44,5 @@ def run(quick: bool = True):
                     peak_GB=round(b / GB, 2),
                     fits_16GB=bool(b <= 16 * GB),
                     fits_128GB=bool(b <= 128 * GB)))
+    write_bench_json("memory", rows)
     return rows

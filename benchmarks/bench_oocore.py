@@ -1,0 +1,133 @@
+"""Out-of-core spMTTKRP: counted DMA traffic of the streaming executor.
+
+Two sections, both *counted* (interpret-mode wall time cannot show DMA
+overlap; the byte counts are exact):
+
+  * ``oocore_stream`` — per mode of a 4-mode tensor whose factor
+    dimensions overflow whole/slab VMEM residency at the chosen budget:
+    the chunked streaming executor's tile-fetch bytes (scheduled /
+    distinct / pipelined — see ``repro.oocore.executor.StreamStats``),
+    the index-stream bytes, the chunk count a small working-set budget
+    forces, and a bit-exactness check against the factor-resident
+    gather backend (interpret mode can always run it, even when a real
+    VMEM budget could not).
+  * ``residency_ladder`` — the ``repro.oocore.planner`` decision swept
+    across VMEM budgets for one dispatch shape: the budget bands where
+    whole residency, slab residency, the streamed window, and the
+    materializing fused family win, with the resident bytes of each.
+
+Everything lands in ``BENCH_oocore.json``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.tensors import random_sparse_tensor
+from repro.kernels.mttkrp import kernel as kkernel
+from repro.kernels.mttkrp import ops as kops
+from repro.oocore import planner
+from repro.oocore.executor import mttkrp_out_of_core
+
+from .common import row, write_bench_json
+
+# Factor dims with hundreds of row tiles: whole/slab residency is MiB-
+# to-GiB scale while the bounded stream window stays a few MiB.
+_SHAPE = (20000, 9000, 4000, 50)
+_BLK, _TILE = 32, 8
+
+
+def _stream_rows(quick: bool) -> list[dict]:
+    import jax.numpy as jnp
+
+    rank = 128 if quick else 256
+    nnz = 500 if quick else 2000
+    rng = np.random.default_rng(0)
+    t = random_sparse_tensor(_SHAPE, nnz, seed=1, distribution="powerlaw")
+    factors = [jnp.asarray(rng.standard_normal((d, rank)), jnp.float32)
+               for d in _SHAPE]
+    out = []
+    modes = (0, 3) if quick else range(len(_SHAPE))
+    for mode in modes:
+        order = np.argsort(t.indices[:, mode], kind="stable")
+        idx = t.indices[order].astype(np.int32)
+        val = t.values[order].astype(np.float32)
+        valid = np.ones(len(val), bool)
+        rows_cap = -(-_SHAPE[mode] // _TILE) * _TILE
+        resident = kops.mttkrp_device_step(
+            jnp.asarray(idx), jnp.asarray(val), jnp.asarray(valid), factors,
+            mode=mode, rows_cap=rows_cap, row_offset=0, blk=_BLK,
+            tile_rows=_TILE, interpret=True, backend="pallas_fused_gather")
+        got, stats = mttkrp_out_of_core(
+            idx, val, valid, factors, mode=mode, rows_cap=rows_cap,
+            blk=_BLK, tile_rows=_TILE, max_chunk_bytes=4096)
+        in_rows = [d for w, d in enumerate(_SHAPE) if w != mode]
+        out.append(row(
+            "oocore_stream", nmodes=len(_SHAPE), mode=mode, rank=rank,
+            nnz=stats.nnz, blk=_BLK, tile_rows=_TILE,
+            chunks=stats.chunks, rank_slabs=stats.rank_slabs,
+            window_tiles=list(stats.window_tiles),
+            window_vmem_MB=round(stats.window_vmem_bytes / 2**20, 3),
+            resident_equiv_vmem_MB=round(
+                stats.resident_equiv_vmem_bytes / 2**20, 3),
+            scheduled_tile_MB=round(stats.scheduled_tile_bytes / 2**20, 3),
+            distinct_tile_MB=round(stats.distinct_tile_bytes / 2**20, 3),
+            pipelined_tile_MB=round(stats.pipelined_tile_bytes / 2**20, 3),
+            tile_B_per_nnz=round(stats.tile_bytes_per_nnz, 1),
+            index_stream_B_per_nnz=round(stats.index_bytes_per_nnz, 1),
+            fused_operand_B_per_nnz=(len(_SHAPE) - 1)
+            * kops.padded_rank(rank) * 4,
+            static_backend=kops.select_backend(
+                "auto", nmodes=len(_SHAPE), rank=rank, blk=_BLK,
+                tile_rows=_TILE, factor_rows=tuple(in_rows)),
+            bitexact_vs_resident=bool(
+                np.array_equal(np.asarray(got), np.asarray(resident))),
+            note="interpret-mode run; traffic is counted, not timed"))
+    return out
+
+
+def _residency_ladder_rows() -> list[dict]:
+    """Planner decision vs budget: the whole→slab→stream→fused bands."""
+    nmodes, rank, blk, tile_rows = 4, 256, 32, 8
+    in_rows = tuple(d for d in _SHAPE[1:])
+    rpad = kops.padded_rank(rank)
+    k = nmodes - 1
+    windows = tuple(planner.stream_window_tiles(blk, r) for r in in_rows)
+    anchors = dict(
+        whole=kkernel.gather_vmem_bytes(k, rpad, blk, tile_rows,
+                                        sum(in_rows)),
+        slab=kkernel.gather_tiled_vmem_bytes(k, rpad, blk, tile_rows,
+                                             sum(in_rows)),
+        stream=kkernel.gather_stream_vmem_bytes(k, rpad, blk, tile_rows,
+                                                windows),
+        fused=kkernel.fused_vmem_bytes(k, rpad, blk, tile_rows),
+    )
+    out = []
+    for label, budget in [
+        ("above_whole", anchors["whole"] + 1),
+        ("at_slab", anchors["slab"]),
+        ("at_stream_window", anchors["stream"]),
+        ("below_stream_window", anchors["stream"] - 1),
+        ("at_fused", anchors["fused"]),
+    ]:
+        plan = planner.plan_residency(
+            nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows,
+            factor_rows=in_rows, vmem_budget=budget)
+        out.append(row(
+            "residency_ladder", label=label, nmodes=nmodes, rank=rank,
+            blk=blk, tile_rows=tile_rows, vmem_budget_MB=round(
+                budget / 2**20, 3),
+            backend=plan.backend, plan_vmem_MB=round(
+                plan.vmem_bytes / 2**20, 3),
+            rank_slabs=plan.rank_slabs,
+            window_tiles=list(plan.window_tiles),
+            policies=[f.policy for f in plan.factors]))
+    out.append(row(
+        "residency_ladder_anchors",
+        **{f"{k_}_MB": round(v / 2**20, 3) for k_, v in anchors.items()}))
+    return out
+
+
+def run(quick: bool = True):
+    rows = _stream_rows(quick) + _residency_ladder_rows()
+    write_bench_json("oocore", rows)
+    return rows

@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.core.flycoo import build_flycoo
 
-from .common import BENCH_TENSORS, bench_tensor, row
+from .common import BENCH_TENSORS, bench_tensor, row, write_bench_json
 
 
 def run(quick: bool = True, scale: float = 0.25):
@@ -33,4 +33,5 @@ def run(quick: bool = True, scale: float = 0.25):
                         flycoo_s=round(t_flycoo, 4),
                         per_mode_sort_s=round(t_sorts, 4),
                         ratio=round(t_flycoo / max(t_sorts, 1e-9), 2)))
+    write_bench_json("preprocess", rows)
     return rows

@@ -115,7 +115,9 @@ def run(quick: bool = True, scale: float = 1.0):
     # --- rank-tiled + bf16 at R >= 1024 (the removed VMEM cliff) ----------
     large_rows = _large_rank_rows(quick)
     rows.extend(large_rows)
-    write_bench_json("rank", fused_rows + gather_rows + large_rows)
+    # The suite's full row set is the artifact (run.py no longer writes
+    # side-channel dumps): fig-10 linearity rows included.
+    write_bench_json("rank", rows)
     return rows
 
 

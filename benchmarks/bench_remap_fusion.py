@@ -16,7 +16,8 @@ import numpy as np
 
 from repro.core.mttkrp import hadamard_rows
 
-from .common import BENCH_TENSORS, bench_tensor, row, timeit
+from .common import (BENCH_TENSORS, bench_tensor, row, timeit,
+                     write_bench_json)
 
 
 def _make(t, rank, mode=0, seed=0):
@@ -84,4 +85,5 @@ def run(quick: bool = True, rank: int = 32, scale: float = 1.0):
                         fused_s=round(t_fused, 5),
                         split_s=round(t_split, 5),
                         speedup=round(t_split / t_fused, 3)))
+    write_bench_json("remap_fusion", rows)
     return rows

@@ -12,7 +12,7 @@ import numpy as np
 from repro.core.flycoo import build_flycoo
 from repro.core.schedule import load_imbalance, lpt_schedule
 
-from .common import BENCH_TENSORS, bench_tensor, row
+from .common import BENCH_TENSORS, bench_tensor, row, write_bench_json
 
 
 def run(quick: bool = True, scale: float = 0.25):
@@ -30,4 +30,5 @@ def run(quick: bool = True, scale: float = 0.25):
             rows.append(row("scaling_fig7", tensor=name, workers=workers,
                             worst_mode_imbalance=round(worst, 4),
                             modeled_speedup=round(workers / worst, 2)))
+    write_bench_json("scaling", rows)
     return rows

@@ -13,7 +13,7 @@ from repro.core.flycoo import build_flycoo
 from repro.core.schedule import (block_cyclic_schedule, load_imbalance,
                                  lpt_schedule)
 
-from .common import BENCH_TENSORS, bench_tensor, row
+from .common import BENCH_TENSORS, bench_tensor, row, write_bench_json
 
 
 def run(quick: bool = True, workers: int = 56, scale: float = 0.25):
@@ -33,4 +33,5 @@ def run(quick: bool = True, workers: int = 56, scale: float = 0.25):
                             lpt_imbalance=round(lpt, 4),
                             cyclic_imbalance=round(cyc, 4),
                             modeled_speedup=round(cyc / lpt, 3)))
+    write_bench_json("schedule", rows)
     return rows

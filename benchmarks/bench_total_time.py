@@ -29,7 +29,8 @@ import numpy as np
 from repro.core.flycoo import build_flycoo, pack_mode
 from repro.core.mttkrp import hadamard_rows, mttkrp, mttkrp_sorted
 
-from .common import BENCH_TENSORS, bench_tensor, row, timeit
+from .common import (BENCH_TENSORS, bench_tensor, row, timeit,
+                     write_bench_json)
 
 
 def _dynasor_all_modes(ft, rank, seed=0):
@@ -152,4 +153,5 @@ def run(quick: bool = True, ranks=(16, 64), scale: float = 1.0):
                 rows.append(row("total_time_fig3", tensor=name, rank=rank,
                                 variant=vname, seconds=round(tt, 5),
                                 speedup_vs_dynasor=round(tt / base, 3)))
+    write_bench_json("total_time", rows)
     return rows

@@ -4,21 +4,25 @@
   PYTHONPATH=src python -m benchmarks.run --full
   PYTHONPATH=src python -m benchmarks.run --only total_time,schedule
 
-Rows print as `k=v` CSV lines and are saved to experiments/bench/*.json.
+Rows print as `k=v` CSV lines; every suite persists its own artifact
+through ``common.write_bench_json`` — the single naming authority —
+as ``experiments/bench/BENCH_<suite>.json`` (the pre-PR-5 lowercase
+``<suite>.json`` dumps are retired). A suite that *errors* still gets a
+BENCH file recording the failure, so downstream tooling can glob
+``BENCH_*.json`` and see every suite accounted for.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
 from . import (bench_bf16_convergence, bench_collective_traffic,
-               bench_dispatch, bench_memory, bench_preprocess, bench_rank,
-               bench_remap_fusion, bench_remap_traffic, bench_scaling,
-               bench_schedule, bench_total_time, roofline)
+               bench_dispatch, bench_memory, bench_oocore, bench_preprocess,
+               bench_rank, bench_remap_fusion, bench_remap_traffic,
+               bench_scaling, bench_schedule, bench_total_time, roofline)
 from . import common
-from .common import print_rows
+from .common import print_rows, write_bench_json
 
 SUITES = {
     "remap_fusion": bench_remap_fusion.run,      # Fig. 2
@@ -33,6 +37,7 @@ SUITES = {
     "collective_traffic": bench_collective_traffic.run,   # §IV lock-free claim
     "dispatch": bench_dispatch.run,              # repro.tune calibrated auto
     "bf16_convergence": bench_bf16_convergence.run,   # bf16 gathers, fit gap
+    "oocore": bench_oocore.run,                  # out-of-core streamed gather
 }
 
 
@@ -55,12 +60,11 @@ def main() -> None:
             rows = fn(quick=not args.full)
         except Exception as e:                    # noqa: BLE001
             rows = [dict(bench=name, status="error", error=repr(e)[:200])]
+            write_bench_json(name, rows)
         dt = time.perf_counter() - t0
         print(f"## {name} ({dt:.1f}s)", flush=True)
         print_rows(rows)
         all_rows.extend(rows)
-        with open(os.path.join(args.out, f"{name}.json"), "w") as f:
-            json.dump(rows, f, indent=1, default=str)
     print(f"## done: {len(all_rows)} rows -> {args.out}/", flush=True)
 
 

@@ -1,5 +1,7 @@
 """Generate the §Dry-run and §Roofline tables for EXPERIMENTS.md from
-experiments/dryrun/*.json.
+experiments/dryrun/*.json, plus a benchmark-artifact inventory from
+experiments/bench/BENCH_*.json (the ``common.write_bench_json``
+artifacts — the retired lowercase ``<suite>.json`` dumps are ignored).
 
   PYTHONPATH=src python experiments/make_report.py > experiments/roofline_tables.md
 """
@@ -36,6 +38,32 @@ def load(dirname):
             d = json.load(f)
         cells[(d["arch"], d["shape"], d["mesh"])] = d
     return cells
+
+
+def bench_inventory(bench_dir="experiments/bench"):
+    """Summarize the BENCH_*.json artifacts (the survivors).
+
+    One line per artifact: suite name, row count, and the `bench=` row
+    kinds inside — enough to see at a glance which figures have data
+    without parsing each file.
+    """
+    paths = sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
+    print("\n### §Benchmarks — artifact inventory "
+          f"({len(paths)} BENCH_*.json)\n")
+    if not paths:
+        print("(no artifacts; run `python -m benchmarks.run`)")
+        return
+    print("| artifact | rows | row kinds |")
+    print("|---|---|---|")
+    for p in paths:
+        name = os.path.basename(p)
+        try:
+            with open(p) as f:
+                rows = json.load(f)
+            kinds = sorted({r.get("bench", "?") for r in rows})
+            print(f"| {name} | {len(rows)} | {', '.join(kinds)} |")
+        except (json.JSONDecodeError, OSError) as e:
+            print(f"| {name} | — | unreadable: {e} |")
 
 
 def main():
@@ -91,6 +119,8 @@ def main():
     fits = [d for d in ok if d.get("peak_hbm_frac", 9) <= 1.0]
     print(f"\ncells: ok={len(ok)} skipped={len(sk)} error={len(err)} "
           f"fit_hbm={len(fits)}/{len(ok)}")
+
+    bench_inventory()
 
 
 if __name__ == "__main__":

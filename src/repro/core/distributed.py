@@ -10,7 +10,9 @@ This is Alg. 2 (Dynasor) on a JAX device mesh:
     (``pallas`` materialized / ``pallas_fused`` N-mode fused /
     ``pallas_fused_tiled`` rank-slabbed / ``pallas_fused_gather`` and
     its tiled composition, which gather the factor rows *inside* the
-    kernel / the bf16-gather variants / ``auto`` dispatch — decision
+    kernel / ``pallas_fused_gather_stream``, the out-of-core variant
+    that keeps the factors HBM-resident behind a streamed VMEM tile
+    window / the bf16-gather variants / ``auto`` dispatch — decision
     matrix in ``docs/kernels.md``);
   * **owner-computes means the output factor needs no psum** — only an
     all_gather to re-replicate it for later modes (on CPU this was "write
@@ -66,10 +68,16 @@ class ModePlan(NamedTuple):
     tile_rows: int              # Pallas output row tile for this mode
     # Rank slabs the fused kernel iterates for this mode: padded_rank /
     # RANK_SLAB when backend is one of the rank-slabbed kernels
-    # (pallas_fused_tiled / pallas_fused_gather_tiled), else 1 (the
+    # (pallas_fused_tiled / pallas_fused_gather_tiled /
+    # pallas_fused_gather_stream, which always slabs), else 1 (the
     # whole padded rank is one resident slab). Pure metadata for traffic
     # accounting / benches — the kernel derives its own grid from shapes.
     rank_slabs: int = 1
+    # Out-of-core stream-window widths per *input* mode (the
+    # repro.oocore planner's FACTOR_ROW_TILE-tile counts) when backend
+    # is pallas_fused_gather_stream, else (). Metadata like rank_slabs:
+    # the kernel derives its real windows from the factor shapes.
+    window_tiles: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,11 +133,13 @@ class DynasorRuntime:
         Tuned runtimes always use the plan's (blk, tile_rows) — rows_cap
         was rounded to the plan's tile — and substitute the plan's
         backend only when the caller asked for ``auto``.
-        ``rank_slabs`` is re-derived from the *resolved* backend so an
-        explicit override never carries stale slab metadata (and an
-        explicit tiled backend on an untuned runtime gets the real slab
-        count); for an unresolved ``auto`` it stays the trivial 1 —
-        only the ops-level dispatch knows what auto becomes.
+        ``rank_slabs`` and the out-of-core ``window_tiles`` are
+        re-derived from the *resolved* backend so an explicit override
+        never carries stale residency metadata (and an explicit tiled
+        or streaming backend on an untuned runtime gets the real slab /
+        window counts — the runtime knows every mode's ``i_pad``); for
+        an unresolved ``auto`` they stay trivial — only the ops-level
+        dispatch knows what auto becomes.
         """
         if self.mode_plans is not None:
             p = self.mode_plans[mode]
@@ -138,9 +148,15 @@ class DynasorRuntime:
         else:
             p = ModePlan(backend, self.blk, self.tile_rows)
         slabs = 1
-        if p.backend in ("pallas_fused_tiled", "pallas_fused_gather_tiled"):
+        if p.backend in ("pallas_fused_tiled", "pallas_fused_gather_tiled",
+                         kops.STREAM_BACKEND):
             slabs = kops.padded_rank(self.rank) // kops.MXU_RANK_MULTIPLE
-        return p._replace(rank_slabs=slabs)
+        window = ()
+        if p.backend == kops.STREAM_BACKEND:
+            from ..oocore.planner import stream_window_tiles
+            window = tuple(stream_window_tiles(p.blk, self.i_pad[w])
+                           for w in range(self.nmodes) if w != mode)
+        return p._replace(rank_slabs=slabs, window_tiles=window)
 
 
 def prepare_runtime(

@@ -37,8 +37,8 @@ Kernel matrix (see ops.py for the dispatch layer that picks between them):
                               and the fused traffic win survives arbitrary
                               rank (the scalar streams are re-read once per
                               slab — the only extra cost).
-  ``fused_mttkrp_3mode``      back-compat wrapper: the 3-mode (two input
-                              factors) special case of the N-mode kernel.
+  ``fused_mttkrp_3mode``      **deprecated alias** (warns): the 3-mode
+                              special case of the N-mode kernel.
   ``fused_mttkrp_nmode_gather``  gather **inside the kernel**: takes the
                               full replicated factor matrices (VMEM-resident
                               across grid steps) plus a block-aligned
@@ -55,6 +55,18 @@ Kernel matrix (see ops.py for the dispatch layer that picks between them):
                               set is ``ΣI_pad·RANK_SLAB·gi`` instead of
                               ``ΣI_pad·R̂·gi`` (the index/scalar streams are
                               re-read once per slab).
+  ``fused_mttkrp_nmode_gather_stream``  **out-of-core** in-kernel gather:
+                              the factor matrices stay HBM-resident and the
+                              Pallas pipeline DMAs ``FACTOR_ROW_TILE``-row
+                              factor tiles into a per-mode window of
+                              ``window_tiles`` VMEM slots, double-buffered
+                              across grid steps and driven by a
+                              scalar-prefetched per-block *tile schedule*
+                              derived from the nonzero index stream. VMEM
+                              holds ``Σ W_w·128·slab·gi`` of factor data
+                              instead of ``ΣI_pad·…`` — arbitrarily large
+                              factor dimensions stream through a bounded
+                              window (composes with the rank-slab axis).
   ==========================  =============================================
 
 Both fused kernels accept bf16 factor-row operands (``ops.py``'s
@@ -79,16 +91,19 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = [
     "MXU_RANK_MULTIPLE",
     "RANK_SLAB",
+    "FACTOR_ROW_TILE",
     "segment_accumulate",
     "fused_mttkrp_nmode",
     "fused_mttkrp_nmode_tiled",
     "fused_mttkrp_nmode_gather",
     "fused_mttkrp_nmode_gather_tiled",
+    "fused_mttkrp_nmode_gather_stream",
     "fused_mttkrp_3mode",
     "fused_vmem_bytes",
     "fused_tiled_vmem_bytes",
     "gather_vmem_bytes",
     "gather_tiled_vmem_bytes",
+    "gather_stream_vmem_bytes",
 ]
 
 # MXU lane width: the rank dimension is padded to a multiple of this for the
@@ -100,6 +115,40 @@ MXU_RANK_MULTIPLE = 128
 
 # Width of one rank slab in ``fused_mttkrp_nmode_tiled`` — one MXU lane tile.
 RANK_SLAB = MXU_RANK_MULTIPLE
+
+# Row height of one streamed factor tile in the out-of-core gather kernel:
+# the unit the Pallas pipeline DMAs from the HBM-resident factor into a
+# VMEM window slot. 128 rows = 16 fp32 sublane tiles — big enough that a
+# tile fetch is one long coalesced burst, small enough that a window of a
+# few slots stays far under the VMEM budget. ``repro.oocore`` derives all
+# its tile arithmetic from this constant.
+FACTOR_ROW_TILE = 128
+
+# Below this rank the one-hot MXU matmul pads R to MXU_RANK_MULTIPLE and
+# wastes ≥ 16× of the array; the XLA segment-sum reference wins. Lives
+# here (the only module with no intra-repo imports) so ops.py and
+# repro.oocore.planner alias one definition instead of each other —
+# either may be imported first.
+MIN_MXU_RANK = MXU_RANK_MULTIPLE // 16
+
+# Per-core VMEM working-set budget for residency planning (half of a
+# v5e core's ~128 MiB VMEM — same θ=0.5 cache-fraction stance as the
+# paper's Eq. 3). Same single-source rationale as MIN_MXU_RANK.
+VMEM_BUDGET_BYTES = 64 * 1024 * 1024
+
+# Dispatch-level name of the out-of-core streaming kernel
+# (fused_mttkrp_nmode_gather_stream) in ops.BACKENDS.
+STREAM_BACKEND_NAME = "pallas_fused_gather_stream"
+
+
+def padded_rank(rank: int, multiple: int = MXU_RANK_MULTIPLE) -> int:
+    """R rounded up to the MXU lane multiple — static dispatch arithmetic.
+
+    The one definition (ops.py and repro.oocore.planner alias it, like
+    the constants above) so feasibility math can never desynchronize
+    between the dispatch and the residency planner.
+    """
+    return rank + (-rank) % multiple
 
 
 def fused_vmem_bytes(num_in_modes: int, rank_padded: int, blk: int,
@@ -183,6 +232,34 @@ def gather_tiled_vmem_bytes(num_in_modes: int, rank_padded: int, blk: int,
     return gather_vmem_bytes(
         num_in_modes, min(rank_padded, rank_slab), blk, tile_rows,
         factor_rows, itemsize=itemsize, gather_itemsize=gather_itemsize)
+
+
+def gather_stream_vmem_bytes(num_in_modes: int, rank_padded: int, blk: int,
+                             tile_rows: int, window_tiles,
+                             frow_tile: int = FACTOR_ROW_TILE,
+                             rank_slab: int = RANK_SLAB, itemsize: int = 4,
+                             gather_itemsize: int | None = None) -> int:
+    """VMEM working set of one ``fused_mttkrp_nmode_gather_stream`` step.
+
+    The factors are *not* resident: per input mode only ``window_tiles``
+    slots of ``frow_tile`` factor rows are held in VMEM (one rank slab
+    wide — the stream kernel always composes with the rank-slab axis),
+    plus the per-block ``(1, window_tiles)`` int32 tile-schedule block.
+    ``window_tiles`` may be a single int applied to every input mode or
+    a per-mode sequence. The scalar-prefetched schedule copy lives in
+    SMEM and — like ``tile_of_block`` in every other kernel's
+    accounting — is not counted here.
+    """
+    gi = itemsize if gather_itemsize is None else gather_itemsize
+    if isinstance(window_tiles, int):
+        window_tiles = (window_tiles,) * num_in_modes
+    assert len(window_tiles) == num_in_modes, (window_tiles, num_in_modes)
+    slab = min(rank_padded, rank_slab)
+    windows = sum(w * frow_tile * slab * gi for w in window_tiles)
+    schedules = sum(window_tiles) * 4          # (1, W) int32 blocks
+    return windows + schedules + fused_vmem_bytes(
+        0, slab, blk, tile_rows, itemsize=itemsize,
+        index_stream_modes=num_in_modes)
 
 
 def _scatter_update(rows, contrib, tile_rows: int):
@@ -299,6 +376,7 @@ def fused_mttkrp_nmode(
     blk: int = 512,
     tile_rows: int = 128,
     interpret: bool = True,
+    out_init=None,
 ):
     """N-mode fused variant: Hadamard product formed in VMEM, never in HBM.
 
@@ -317,6 +395,11 @@ def fused_mttkrp_nmode(
       tile_of_block: ``(num_blocks,)`` int32 output tile per block,
         non-decreasing.
       rows_cap: total output rows (multiple of tile_rows).
+      out_init: optional ``(rows_cap, R)`` float32 accumulator to add
+        into (aliased — the kernel's output starts from it). ``None``
+        means zeros. ``repro.oocore``'s chunked executor threads the
+        running accumulator through here so splitting a stream into
+        chunks reproduces the single-pass accumulation order bit-exactly.
 
     Returns:
       ``(rows_cap, R)`` float32 accumulated output.
@@ -352,7 +435,8 @@ def fused_mttkrp_nmode(
         out_specs=pl.BlockSpec((tile_rows, rank),
                                lambda b, tiles: (tiles[b], 0)),
     )
-    out_init = jnp.zeros((rows_cap, rank), dtype=jnp.float32)
+    if out_init is None:
+        out_init = jnp.zeros((rows_cap, rank), dtype=jnp.float32)
     return pl.pallas_call(
         functools.partial(_fused_nmode_body, tile_rows=tile_rows),
         grid_spec=grid_spec,
@@ -379,6 +463,7 @@ def fused_mttkrp_nmode_tiled(
     tile_rows: int = 128,
     rank_slab: int = RANK_SLAB,
     interpret: bool = True,
+    out_init=None,
 ):
     """Rank-tiled N-mode fused variant: VMEM working set independent of R.
 
@@ -434,7 +519,8 @@ def fused_mttkrp_nmode_tiled(
         out_specs=pl.BlockSpec((tile_rows, rank_slab),
                                lambda s, b, tiles: (tiles[b], s)),
     )
-    out_init = jnp.zeros((rows_cap, rank), dtype=jnp.float32)
+    if out_init is None:
+        out_init = jnp.zeros((rows_cap, rank), dtype=jnp.float32)
     return pl.pallas_call(
         functools.partial(_fused_nmode_body, tile_rows=tile_rows),
         grid_spec=grid_spec,
@@ -488,6 +574,7 @@ def fused_mttkrp_nmode_gather(
     blk: int = 512,
     tile_rows: int = 128,
     interpret: bool = True,
+    out_init=None,
 ):
     """Factor-resident in-kernel gather variant of the fused kernel.
 
@@ -552,7 +639,8 @@ def fused_mttkrp_nmode_gather(
         out_specs=pl.BlockSpec((tile_rows, rank),
                                lambda b, tiles: (tiles[b], 0)),
     )
-    out_init = jnp.zeros((rows_cap, rank), dtype=jnp.float32)
+    if out_init is None:
+        out_init = jnp.zeros((rows_cap, rank), dtype=jnp.float32)
     return pl.pallas_call(
         functools.partial(_fused_gather_body, tile_rows=tile_rows),
         grid_spec=grid_spec,
@@ -581,6 +669,7 @@ def fused_mttkrp_nmode_gather_tiled(
     tile_rows: int = 128,
     rank_slab: int = RANK_SLAB,
     interpret: bool = True,
+    out_init=None,
 ):
     """Slab-streamed in-kernel gather: one rank slab of each factor resident.
 
@@ -636,7 +725,8 @@ def fused_mttkrp_nmode_gather_tiled(
         out_specs=pl.BlockSpec((tile_rows, rank_slab),
                                lambda s, b, tiles: (tiles[b], s)),
     )
-    out_init = jnp.zeros((rows_cap, rank), dtype=jnp.float32)
+    if out_init is None:
+        out_init = jnp.zeros((rows_cap, rank), dtype=jnp.float32)
     return pl.pallas_call(
         functools.partial(_fused_gather_body, tile_rows=tile_rows),
         grid_spec=grid_spec,
@@ -646,6 +736,178 @@ def fused_mttkrp_nmode_gather_tiled(
         input_output_aliases={4 + n_in: 0},
         interpret=interpret,
     )(tile_of_block, local_row_in_tile, vals, idx_stream, *factors, out_init)
+
+
+def _fused_gather_stream_body(*refs, tile_rows: int, num_in_modes: int,
+                              window_tiles: tuple, frow_tile: int):
+    """Out-of-core gather: windowed factor tiles + Hadamard + scatter.
+
+    Ref layout (positional): ``tile_ref, sched_pref_0 … sched_pref_{K-1}``
+    (scalar prefetch — consumed by the BlockSpec index maps, unused
+    here), then ``row_ref, val_ref, idx_ref, schedblk_0 … schedblk_{K-1},
+    win_{0,0} … win_{K-1,W_{K-1}-1}, init_ref, out_ref``. Each
+    ``win_{w,j}`` is one ``(frow_tile, slab)`` VMEM slot whose HBM source
+    tile the prefetched schedule selected for this block; ``schedblk_w``
+    is the same schedule row as a ``(1, W_w)`` VMEM block so the body can
+    map each nonzero's global factor row to its window slot:
+
+        slot  = argmax(global_row // frow_tile == schedule)   (first hit)
+        local = slot · frow_tile + global_row % frow_tile
+
+    The gathered values are bitwise the rows the factor-resident kernel
+    would have gathered, so the arithmetic (and its order) is unchanged
+    — streamed ≡ resident bit-exactly. Padding/invalid nonzeros may miss
+    every scheduled tile (argmax of all-False = slot 0); they then
+    gather an arbitrary in-window row, harmless at value 0.
+    """
+    k = num_in_modes
+    row_ref, val_ref, idx_ref = refs[1 + k], refs[2 + k], refs[3 + k]
+    sched_refs = refs[4 + k:4 + 2 * k]
+    win_refs = refs[4 + 2 * k:-2]
+    out_ref = refs[-1]
+    rows = row_ref[...]
+    idx = idx_ref[...]
+    contrib = val_ref[...][:, None].astype(jnp.float32)
+    off = 0
+    for w in range(k):
+        width = window_tiles[w]
+        slots = [win_refs[off + j][...] for j in range(width)]
+        off += width
+        window = slots[0] if width == 1 else jnp.concatenate(slots, axis=0)
+        tiles_b = sched_refs[w][...][0]                    # (W_w,)
+        gtile = idx[:, w] // frow_tile
+        slot = jnp.argmax(gtile[:, None] == tiles_b[None, :],
+                          axis=1).astype(jnp.int32)
+        local = slot * frow_tile + idx[:, w] % frow_tile
+        contrib = contrib * jnp.take(window, local, axis=0)
+    update = _scatter_update(rows, contrib, tile_rows)
+    out_ref[...] += update.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows_cap", "blk", "tile_rows", "frow_tile",
+                     "rank_slab", "interpret"),
+)
+def fused_mttkrp_nmode_gather_stream(
+    vals,
+    idx_stream,
+    factors,
+    local_row_in_tile,
+    tile_of_block,
+    tile_schedules,
+    *,
+    rows_cap: int,
+    blk: int = 512,
+    tile_rows: int = 128,
+    frow_tile: int = FACTOR_ROW_TILE,
+    rank_slab: int = RANK_SLAB,
+    interpret: bool = True,
+    out_init=None,
+):
+    """Out-of-core in-kernel gather: HBM-resident factors, windowed tiles.
+
+    Same contract as :func:`fused_mttkrp_nmode_gather` except the factor
+    matrices are **never** held resident: per input mode ``w`` the kernel
+    keeps a window of ``W_w = tile_schedules[w].shape[1]`` VMEM slots of
+    ``frow_tile`` factor rows each, and the Pallas pipeline DMAs each
+    slot's HBM tile per grid step — double-buffered against the previous
+    step's compute, exactly like every other streamed operand — with the
+    source tile chosen by the scalar-prefetched ``tile_schedules``
+    (ops.py's ``_tile_schedule`` builds them from the index stream: the
+    sorted distinct ``frow_tile``-row tiles each block touches).
+    FLYCOO's row-sorted blocks keep the schedule monotone within a
+    block, so when consecutive blocks keep a slot on the same tile the
+    pipeline skips the re-fetch.
+
+    Extra preconditions over the resident kernel:
+      * each factor's row count is a multiple of ``frow_tile`` (ops.py
+        pads);
+      * ``tile_schedules[w]`` is ``(num_blocks, W_w)`` int32 with every
+        tile of block ``b``'s nonzeros present in row ``b`` — guaranteed
+        by construction when ``W_w >= min(blk, ceil(rows_w /
+        frow_tile))``, the bound ``repro.oocore.planner`` plans with;
+      * R is a multiple of ``rank_slab`` (the stream kernel always
+        composes with the rank-slab grid axis — grid =
+        ``(R // rank_slab, num_blocks)`` — so the window cost is
+        independent of R; pass ``rank_slab=R̂`` to disable slabbing).
+
+    ``out_init`` as in :func:`fused_mttkrp_nmode`: the accumulator the
+    output starts from (``None`` = zeros), which lets the chunked
+    executor reproduce single-pass accumulation order bit-exactly.
+
+    Returns ``(rows_cap, R)`` float32 accumulated output.
+    """
+    factors = tuple(factors)
+    tile_schedules = tuple(tile_schedules)
+    assert factors, "need at least one input-factor matrix"
+    n_pad, n_in = idx_stream.shape
+    assert n_in == len(factors) == len(tile_schedules), (
+        n_in, len(factors), len(tile_schedules))
+    rank = factors[0].shape[1]
+    for f in factors:
+        assert f.shape[1] == rank, (f.shape, rank)
+        assert f.shape[0] % frow_tile == 0, (f.shape, frow_tile)
+    assert n_pad % blk == 0, (n_pad, blk)
+    assert rank % rank_slab == 0, (rank, rank_slab)
+    assert rows_cap % tile_rows == 0, (rows_cap, tile_rows)
+    num_blocks = n_pad // blk
+    num_slabs = rank // rank_slab
+    window_tiles = tuple(s.shape[1] for s in tile_schedules)
+    for w, s in enumerate(tile_schedules):
+        assert s.shape == (num_blocks, window_tiles[w]), (s.shape, w)
+
+    in_specs = (
+        [
+            pl.BlockSpec((blk,), lambda s, b, tiles, *scheds: (b,)),
+            pl.BlockSpec((blk,), lambda s, b, tiles, *scheds: (b,)),
+            pl.BlockSpec((blk, n_in),
+                         lambda s, b, tiles, *scheds: (b, 0)),
+        ]
+        + [
+            # This block's schedule row, as a VMEM operand for the body.
+            pl.BlockSpec((1, window_tiles[w]),
+                         lambda s, b, tiles, *scheds: (b, 0))
+            for w in range(n_in)
+        ]
+        + [
+            # Window slot j of mode w: one frow_tile-row, rank_slab-wide
+            # factor tile, whose source the prefetched schedule picks.
+            # The factor itself stays in HBM; only these slots are VMEM.
+            pl.BlockSpec((frow_tile, rank_slab),
+                         lambda s, b, tiles, *scheds, w=w, j=j:
+                         (scheds[w][b, j], s))
+            for w in range(n_in) for j in range(window_tiles[w])
+        ]
+        + [
+            pl.BlockSpec((tile_rows, rank_slab),
+                         lambda s, b, tiles, *scheds: (tiles[b], s)),
+        ]
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1 + n_in,       # tile_of_block + K schedules
+        grid=(num_slabs, num_blocks),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tile_rows, rank_slab),
+                               lambda s, b, tiles, *scheds: (tiles[b], s)),
+    )
+    if out_init is None:
+        out_init = jnp.zeros((rows_cap, rank), dtype=jnp.float32)
+    window_operands = [factors[w] for w in range(n_in)
+                       for _ in range(window_tiles[w])]
+    return pl.pallas_call(
+        functools.partial(
+            _fused_gather_stream_body, tile_rows=tile_rows,
+            num_in_modes=n_in, window_tiles=window_tiles,
+            frow_tile=frow_tile),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows_cap, rank), jnp.float32),
+        # out_init -> out; operand index counts the 1+K prefetch args +
+        # row/val/idx + K schedule blocks + ΣW_w window slots.
+        input_output_aliases={4 + 2 * n_in + sum(window_tiles): 0},
+        interpret=interpret,
+    )(tile_of_block, *tile_schedules, local_row_in_tile, vals, idx_stream,
+      *tile_schedules, *window_operands, out_init)
 
 
 def fused_mttkrp_3mode(
@@ -660,7 +922,19 @@ def fused_mttkrp_3mode(
     tile_rows: int = 128,
     interpret: bool = True,
 ):
-    """3-mode back-compat wrapper over :func:`fused_mttkrp_nmode`."""
+    """Deprecated alias: the 3-mode special case of the N-mode kernel.
+
+    Kept only for pre-N-mode callers; there is one kernel entry per
+    family and this is not it. Call :func:`fused_mttkrp_nmode` with
+    ``factor_rows=(rows_a, rows_b)`` instead — identical output,
+    bitwise.
+    """
+    import warnings
+
+    warnings.warn(
+        "fused_mttkrp_3mode is a deprecated alias; call "
+        "fused_mttkrp_nmode(vals, (rows_a, rows_b), ...) instead",
+        DeprecationWarning, stacklevel=2)
     return fused_mttkrp_nmode(
         vals, (rows_a, rows_b), local_row_in_tile, tile_of_block,
         rows_cap=rows_cap, blk=blk, tile_rows=tile_rows, interpret=interpret,

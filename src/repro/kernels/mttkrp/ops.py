@@ -8,13 +8,15 @@ tile — the runtime equivalent of FLYCOO's shard/super-shard alignment), then
 The runnable backends are the :data:`BACKENDS` tuple (``ref`` / ``pallas``
 / ``pallas_fused`` / ``pallas_fused_tiled`` / ``pallas_fused_bf16`` /
 ``pallas_fused_gather`` / ``pallas_fused_gather_tiled`` /
-``pallas_fused_gather_bf16``), plus ``auto`` which resolves through
-:func:`select_backend`. **The full backend decision matrix — per-backend
-traffic/VMEM characteristics, the working-set formulas, and worked
-``auto`` examples — lives in ``docs/kernels.md``;** this module
-deliberately doesn't duplicate that table. Short version: ``auto`` picks
-the cheapest numerics-preserving path that fits the VMEM budget
-(in-kernel gather → fused → rank-tiled → materialized, with a
+``pallas_fused_gather_bf16`` / ``pallas_fused_gather_stream``), plus
+``auto`` which resolves through :func:`select_backend`. **The full
+backend decision matrix — per-backend traffic/VMEM characteristics, the
+working-set formulas, and worked ``auto`` examples — lives in
+``docs/kernels.md``;** this module deliberately doesn't duplicate that
+table. Short version: ``auto`` picks the cheapest numerics-preserving
+path whose residency the :mod:`repro.oocore.planner` can certify under
+the VMEM budget (in-kernel gather → slab-streamed gather → out-of-core
+row-streamed gather → fused → rank-tiled → materialized, with a
 segment-sum ``ref`` below the MXU-padding rank threshold; the gather
 family needs the factor sizes — ``factor_rows`` — to be considered);
 the bf16-gather variants (bf16 gathers, fp32 accumulate — halve gather
@@ -36,20 +38,24 @@ import jax.numpy as jnp
 
 from . import kernel as _kernel
 from . import ref as _ref
+from ...oocore import planner as _planner
 
 __all__ = [
     "BACKENDS",
     "AUTO_BACKENDS",
     "GATHER_BACKENDS",
+    "STREAM_BACKEND",
     "MIN_MXU_RANK",
     "MXU_RANK_MULTIPLE",
     "build_block_layout",
     "fused_fits_vmem",
     "gather_fits_vmem",
+    "gather_stream_fits_vmem",
     "mttkrp_blocked",
     "mttkrp_device_step",
     "pad_rank",
     "select_backend",
+    "tile_schedule",
     "VMEM_BUDGET_BYTES",
 ]
 
@@ -59,12 +65,14 @@ MXU_RANK_MULTIPLE = _kernel.MXU_RANK_MULTIPLE
 
 # Per-core VMEM working-set budget for the auto dispatch (half of a v5e
 # core's ~128 MiB VMEM — same θ=0.5 cache-fraction stance as the paper's
-# Eq. 3).
-VMEM_BUDGET_BYTES = 64 * 1024 * 1024
+# Eq. 3). Single source of truth in kernel.py (shared with the
+# repro.oocore planner, which may be imported before this module).
+VMEM_BUDGET_BYTES = _kernel.VMEM_BUDGET_BYTES
 
 # Below this rank the one-hot MXU matmul pads R to MXU_RANK_MULTIPLE and
 # wastes ≥ 16× of the array; the XLA segment-sum reference wins.
-MIN_MXU_RANK = MXU_RANK_MULTIPLE // 16
+# (kernel.py owns it so dispatch and planner can never disagree.)
+MIN_MXU_RANK = _kernel.MIN_MXU_RANK
 
 # Backends this module can run (mttkrp_device_step / select_backend).
 # docs/kernels.md's decision matrix is CI-checked against this tuple
@@ -80,6 +88,7 @@ BACKENDS = (
     "pallas_fused_gather",
     "pallas_fused_gather_tiled",
     "pallas_fused_gather_bf16",
+    "pallas_fused_gather_stream",
 )
 
 # What ``auto`` may resolve to (statically or via a calibration table):
@@ -94,6 +103,10 @@ AUTO_BACKENDS = tuple(b for b in BACKENDS if not b.endswith("_bf16"))
 # these skip the HBM materialization of gathered factor rows entirely.
 GATHER_BACKENDS = ("pallas_fused_gather", "pallas_fused_gather_tiled")
 
+# The out-of-core member of the gather family: factors stay HBM-resident
+# and stream through a bounded VMEM tile window (``repro.oocore``).
+STREAM_BACKEND = _kernel.STREAM_BACKEND_NAME
+
 
 def pad_rank(x, multiple: int = MXU_RANK_MULTIPLE):
     """Pad the trailing (rank) dim to an MXU-aligned multiple."""
@@ -105,9 +118,23 @@ def pad_rank(x, multiple: int = MXU_RANK_MULTIPLE):
     return jnp.pad(x, widths)
 
 
-def padded_rank(rank: int, multiple: int = MXU_RANK_MULTIPLE) -> int:
-    """Static version of :func:`pad_rank` for dispatch arithmetic."""
-    return rank + (-rank) % multiple
+# Static version of :func:`pad_rank` for dispatch arithmetic — aliased
+# from kernel.py, the single source shared with the residency planner.
+padded_rank = _kernel.padded_rank
+
+
+def _pad_factor_rows(x, multiple: int):
+    """Pad a factor's leading (row) dim to a whole number of stream tiles.
+
+    The stream kernel DMAs ``FACTOR_ROW_TILE``-row tiles out of the
+    HBM-resident factor, so its row count must divide evenly; padding
+    rows are zero and unreachable (indices are < the true row count).
+    """
+    pad = (-x.shape[0]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths)
 
 
 def fused_fits_vmem(nmodes: int, rank: int, blk: int, tile_rows: int,
@@ -115,38 +142,57 @@ def fused_fits_vmem(nmodes: int, rank: int, blk: int, tile_rows: int,
                     tiled: bool = False, gather_itemsize: int = 4) -> bool:
     """Hard feasibility: does a fused kernel's working set fit VMEM?
 
-    The single predicate both dispatch layers use (static rule here,
-    tuned planning in ``repro.tune.model``) — a calibration table may
+    Thin delegate to :func:`repro.oocore.planner.backend_fits` — the one
+    residency authority every dispatch layer shares (static rule here,
+    tuned planning in ``repro.tune.model``). A calibration table may
     *prefer* a fused backend, but never past this bound. ``tiled=True``
     budgets one ``RANK_SLAB``-wide slab instead of the full padded rank
     (the rank-tiled kernel's working set); ``gather_itemsize=2`` sizes
     the bf16-gather variants.
     """
-    fn = (_kernel.fused_tiled_vmem_bytes if tiled
-          else _kernel.fused_vmem_bytes)
-    fused_bytes = fn(nmodes - 1, padded_rank(rank), blk, tile_rows,
-                     gather_itemsize=gather_itemsize)
-    return fused_bytes <= vmem_budget
+    return _planner.backend_fits(
+        "pallas_fused_tiled" if tiled else "pallas_fused",
+        nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows,
+        vmem_budget=vmem_budget, gather_itemsize=gather_itemsize)
 
 
 def gather_fits_vmem(nmodes: int, rank: int, blk: int, tile_rows: int,
                      factor_rows: int, vmem_budget: int = VMEM_BUDGET_BYTES,
                      *, tiled: bool = False,
                      gather_itemsize: int = 4) -> bool:
-    """Hard feasibility of the in-kernel gather family.
+    """Hard feasibility of the resident in-kernel gather family.
 
     ``factor_rows`` is the total row count of the N−1 replicated
     input-factor matrices (Σ I_pad over non-output modes) — the resident
     operand the gather kernels hold in VMEM. ``tiled=True`` budgets one
     ``RANK_SLAB``-wide column slab of each factor instead of the full
     padded rank (the slab-streamed regime); ``gather_itemsize=2`` sizes
-    the bf16-gather variants.
+    the bf16-gather variants. Delegates to the ``repro.oocore`` planner.
     """
-    fn = (_kernel.gather_tiled_vmem_bytes if tiled
-          else _kernel.gather_vmem_bytes)
-    gather_bytes = fn(nmodes - 1, padded_rank(rank), blk, tile_rows,
-                      factor_rows, gather_itemsize=gather_itemsize)
-    return gather_bytes <= vmem_budget
+    return _planner.backend_fits(
+        "pallas_fused_gather_tiled" if tiled else "pallas_fused_gather",
+        nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows,
+        factor_rows=factor_rows, vmem_budget=vmem_budget,
+        gather_itemsize=gather_itemsize)
+
+
+def gather_stream_fits_vmem(nmodes: int, rank: int, blk: int,
+                            tile_rows: int, factor_rows,
+                            vmem_budget: int = VMEM_BUDGET_BYTES, *,
+                            gather_itemsize: int = 4) -> bool:
+    """Hard feasibility of the out-of-core row-streamed gather.
+
+    Unlike the resident family, this scales with the *window* (``Σ_w
+    min(blk, ceil(rows_w / FACTOR_ROW_TILE))`` tiles of 128 rows, one
+    rank slab wide), not with the factor sizes — only the window must
+    fit. ``factor_rows`` may be the aggregate int (conservative windows)
+    or a per-input-mode sequence (exact). Delegates to the
+    ``repro.oocore`` planner.
+    """
+    return _planner.backend_fits(
+        STREAM_BACKEND, nmodes=nmodes, rank=rank, blk=blk,
+        tile_rows=tile_rows, factor_rows=factor_rows,
+        vmem_budget=vmem_budget, gather_itemsize=gather_itemsize)
 
 
 def select_backend(
@@ -158,17 +204,19 @@ def select_backend(
     tile_rows: int = 128,
     vmem_budget: int = VMEM_BUDGET_BYTES,
     table=None,
-    factor_rows: int | None = None,
+    factor_rows=None,
 ) -> str:
     """Resolve ``auto`` to a concrete backend; pass others through.
 
-    ``factor_rows`` is the total row count of the N−1 replicated
-    input-factor matrices (Σ I_pad over non-output modes) — the
-    information the in-kernel gather family's VMEM predicate needs.
+    ``factor_rows`` describes the N−1 replicated input-factor matrices
+    (rows over non-output modes) — the information the gather family's
+    residency planning needs: an int total (Σ I_pad, the historical
+    form), or a per-input-mode sequence (exact stream-window planning).
     ``None`` means the caller doesn't know the factor sizes (a purely
-    shape-keyed dispatch query), and the gather family is then never
-    chosen: its feasibility cannot be certified. ``mttkrp_device_step``
-    always passes it, so end-to-end ``auto`` prefers the gather family
+    shape-keyed dispatch query), and the gather family — the out-of-core
+    streamed member included — is then never chosen: its feasibility
+    cannot be certified. ``mttkrp_device_step`` always passes the
+    per-mode sequence, so end-to-end ``auto`` prefers the gather family
     whenever it fits.
 
     When a calibration ``table`` (a ``repro.tune`` ``CalibrationTable``
@@ -180,41 +228,28 @@ def select_backend(
     decision applies, bit-identical to the no-table path. Two hard
     constraints bound the table, preference never overrides them:
 
-      * VMEM feasibility — a table answer of ``pallas_fused`` /
-        ``pallas_fused_tiled`` whose working set exceeds ``vmem_budget``,
-        or of a gather backend whose resident-factor set does (or whose
-        ``factor_rows`` is unknown), is an extrapolation beyond the
-        measured grid: it is discarded and the static decision applies;
+      * VMEM feasibility — every table answer is re-certified by the
+        ``repro.oocore`` residency planner
+        (:func:`repro.oocore.planner.backend_fits`): a fused/tiled
+        choice whose working set exceeds ``vmem_budget``, or a gather
+        choice (resident, slab-streamed or out-of-core row-streamed)
+        whose residency cannot be certified (``factor_rows`` unknown, or
+        over budget), is an extrapolation beyond the measured grid — it
+        is discarded and the static decision applies;
       * numerics — the table is only consulted over :data:`AUTO_BACKENDS`,
         so a measured-fast bf16-gather variant never changes results
         behind ``auto``'s back.
 
-    Static decision, in order (all static — safe to call under jit
-    tracing; worked examples in ``docs/kernels.md``):
-      1. ``rank < MIN_MXU_RANK`` → ``ref``: the MXU one-hot scatter pads R
-         to ``MXU_RANK_MULTIPLE``, so ≥ 16× of every matmul is padding;
-         plain segment-sum wins.
-      2. the replicated factor matrices fit VMEM whole
-         (``kernel.gather_vmem_bytes``, needs ``factor_rows``) →
-         ``pallas_fused_gather``: the gather happens in-kernel, the
-         per-nonzero operand stream is ``(N−1)·4`` B of indices instead
-         of ``(N−1)·R̂·4`` B of materialized rows.
-      3. one ``RANK_SLAB`` column slab of each factor fits
-         (``kernel.gather_tiled_vmem_bytes``) →
-         ``pallas_fused_gather_tiled``: in-kernel gather, slab-streamed —
-         index/scalar streams re-read once per slab.
-      4. fused VMEM working set (N−1 gathered factor blocks + contrib +
-         one-hot + out tile, see ``kernel.fused_vmem_bytes``) fits the
-         budget → ``pallas_fused``: gathered rows are materialized in
-         HBM, but contrib never is.
-      5. the *rank-tiled* fused working set (one ``RANK_SLAB`` slab, see
-         ``kernel.fused_tiled_vmem_bytes``) fits → ``pallas_fused_tiled``:
-         same gather/scatter traffic as fused, slab-resident — this is
-         what removed the old large-R cliff onto the materialized path.
-      6. otherwise → ``pallas``: materialize contrib in HBM, keeping only
-         one block in VMEM per grid step (only reachable with extreme
-         ``blk``/``tile_rows``, since the slabbed working set no longer
-         grows with R).
+    Static decision: the :func:`repro.oocore.planner.plan_residency`
+    ladder (all static — safe to call under jit tracing; worked
+    examples in ``docs/kernels.md``): ``ref`` below the MXU-padding rank
+    threshold, else the first residency rung whose working set fits the
+    budget — factors whole-VMEM (``pallas_fused_gather``) → one rank
+    slab resident (``pallas_fused_gather_tiled``) → out-of-core tile
+    window (``pallas_fused_gather_stream``; factors stay HBM-resident) →
+    fused (``pallas_fused``) → rank-tiled fused (``pallas_fused_tiled``)
+    → materialized ``pallas``. Rungs that need the factor sizes are
+    skipped when ``factor_rows`` is ``None``.
     """
     if backend != "auto":
         if backend not in BACKENDS:
@@ -236,33 +271,16 @@ def select_backend(
             nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows,
             allowed=AUTO_BACKENDS,
         ) if rank_ok else None
-        if choice in ("pallas_fused", "pallas_fused_tiled") \
-                and not fused_fits_vmem(
-                    nmodes, rank, blk, tile_rows, vmem_budget,
-                    tiled=choice == "pallas_fused_tiled"):
+        if choice is not None and not _planner.backend_fits(
+                choice, nmodes=nmodes, rank=rank, blk=blk,
+                tile_rows=tile_rows, factor_rows=factor_rows,
+                vmem_budget=vmem_budget):
             choice = None               # infeasible extrapolation
-        elif choice in GATHER_BACKENDS and (
-                factor_rows is None or not gather_fits_vmem(
-                    nmodes, rank, blk, tile_rows, factor_rows, vmem_budget,
-                    tiled=choice == "pallas_fused_gather_tiled")):
-            choice = None               # factor residency not certifiable
         if choice is not None:
             return choice
-    if rank < MIN_MXU_RANK:
-        return "ref"
-    if factor_rows is not None:
-        if gather_fits_vmem(nmodes, rank, blk, tile_rows, factor_rows,
-                            vmem_budget):
-            return "pallas_fused_gather"
-        if gather_fits_vmem(nmodes, rank, blk, tile_rows, factor_rows,
-                            vmem_budget, tiled=True):
-            return "pallas_fused_gather_tiled"
-    if fused_fits_vmem(nmodes, rank, blk, tile_rows, vmem_budget):
-        return "pallas_fused"
-    if fused_fits_vmem(nmodes, rank, blk, tile_rows, vmem_budget,
-                       tiled=True):
-        return "pallas_fused_tiled"
-    return "pallas"
+    return _planner.plan_residency(
+        nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows,
+        factor_rows=factor_rows, vmem_budget=vmem_budget).backend
 
 
 def n_pad_for(cap: int, rows_cap: int, blk: int, tile_rows: int) -> int:
@@ -327,6 +345,38 @@ def _align_to_blocks(x, slot, n_pad: int):
     return jnp.zeros(out_shape, x.dtype).at[slot].set(x)[:-1]
 
 
+def tile_schedule(indices_aligned, blk: int, window: int,
+                  frow_tile: int = _kernel.FACTOR_ROW_TILE):
+    """Per-block factor-tile schedule for the out-of-core stream kernel.
+
+    ``indices_aligned`` is one mode's block-aligned ``(n_pad,)`` int32
+    factor-row stream. Returns a ``(n_pad // blk, window)`` int32 array:
+    row ``b`` holds the sorted distinct ``frow_tile``-row factor tiles
+    block ``b``'s nonzeros touch, padded (by repeating the first tile)
+    up to ``window`` slots. Correct whenever ``window >=`` the block's
+    distinct-tile count — guaranteed for ``window = min(blk,
+    ceil(rows / frow_tile))`` (``planner.stream_window_tiles``), since a
+    block holds ``blk`` nonzeros and a factor only has that many tiles.
+    jit-safe (static shapes throughout); this is the schedule the
+    kernel's BlockSpec index maps consume via scalar prefetch.
+    """
+    tiles = (indices_aligned // frow_tile).astype(jnp.int32)
+    per_block = tiles.reshape(-1, blk)
+    num_blocks = per_block.shape[0]
+    st = jnp.sort(per_block, axis=1)
+    first = jnp.concatenate(
+        [jnp.ones((num_blocks, 1), bool), st[:, 1:] != st[:, :-1]], axis=1)
+    rank_of = jnp.cumsum(first, axis=1) - 1            # distinct rank
+    # Scatter each first occurrence to its rank; duplicates go to a dump
+    # column that is sliced off. Unfilled slots keep the block's first
+    # (smallest) tile so padding never schedules a tile the window
+    # wouldn't otherwise hold.
+    dest = jnp.where(first, rank_of, window)
+    sched = jnp.broadcast_to(st[:, :1], (num_blocks, window + 1))
+    sched = sched.at[jnp.arange(num_blocks)[:, None], dest].set(st)
+    return sched[:, :window].astype(jnp.int32)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("rows_cap", "blk", "tile_rows", "interpret", "use_ref"),
@@ -389,8 +439,9 @@ def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
       gather_dtype: ``"float32"`` | ``"bfloat16"`` — dtype the fused
         family gathers factor rows in (the accumulate is always fp32).
         ``"bfloat16"`` composes with any fused backend (in-kernel gather
-        included: the resident factor matrices are held in bf16); the
-        ``pallas_fused_bf16`` / ``pallas_fused_gather_bf16`` backend
+        included: the resident factor matrices — or the streamed tile
+        windows of ``pallas_fused_gather_stream`` — are held in bf16);
+        the ``pallas_fused_bf16`` / ``pallas_fused_gather_bf16`` backend
         names are the untiled kernels with this forced on (so a plain
         backend-string API can reach them). The materialized/``ref``
         paths ignore it.
@@ -408,7 +459,7 @@ def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
     in_modes = [w for w in range(nmodes) if w != mode]
     backend = select_backend(
         backend, nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows,
-        factor_rows=sum(factors[w].shape[0] for w in in_modes),
+        factor_rows=tuple(factors[w].shape[0] for w in in_modes),
     )
     if backend == "pallas_fused_bf16":
         backend, gather_dtype = "pallas_fused", "bfloat16"
@@ -417,7 +468,8 @@ def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
     local_row = (idx[:, mode] - row_offset).astype(jnp.int32)
     local_row = jnp.where(valid, local_row, 0)
 
-    if backend in GATHER_BACKENDS + ("pallas_fused", "pallas_fused_tiled"):
+    if backend in GATHER_BACKENDS + (STREAM_BACKEND, "pallas_fused",
+                                     "pallas_fused_tiled"):
         gdt = jnp.bfloat16 if gather_dtype == "bfloat16" else jnp.float32
         vals = jnp.where(valid, val, 0.0)
         n_pad = n_pad_for(local_row.shape[0], rows_cap, blk, tile_rows)
@@ -428,7 +480,7 @@ def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
         r_al = _align_to_blocks(
             (local_row % tile_rows).astype(jnp.int32), slot, n_pad
         )
-        if backend in GATHER_BACKENDS:
+        if backend in GATHER_BACKENDS + (STREAM_BACKEND,):
             # In-kernel gather: no per-factor take, no _align_to_blocks
             # of R-wide rows — only the int32 index stream is
             # block-aligned, and the replicated factor matrices go to
@@ -443,6 +495,25 @@ def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
             idx_al = _align_to_blocks(idx_in, slot, n_pad)
             fmats = tuple(pad_rank(factors[w].astype(gdt))
                           for w in in_modes)
+            if backend == STREAM_BACKEND:
+                # Out-of-core: factors stay HBM-resident; the kernel
+                # streams FACTOR_ROW_TILE-row tiles through a bounded
+                # VMEM window, driven by the per-block tile schedule.
+                # Window widths are the planner's static correctness
+                # bound, so this path is jit-safe for any index data.
+                frow = _kernel.FACTOR_ROW_TILE
+                fmats = tuple(_pad_factor_rows(f, frow) for f in fmats)
+                scheds = tuple(
+                    tile_schedule(
+                        idx_al[:, i], blk,
+                        _planner.stream_window_tiles(blk, f.shape[0]))
+                    for i, f in enumerate(fmats))
+                out = _kernel.fused_mttkrp_nmode_gather_stream(
+                    v_al, idx_al, fmats, r_al, tile_of_block, scheds,
+                    rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
+                    interpret=interpret,
+                )
+                return out[:, :rank]
             kern = (_kernel.fused_mttkrp_nmode_gather_tiled
                     if backend == "pallas_fused_gather_tiled"
                     else _kernel.fused_mttkrp_nmode_gather)

@@ -1,0 +1,50 @@
+"""repro.oocore — out-of-core spMTTKRP: residency planning + chunked runs.
+
+The gather family (PR 4) made factor residency the dispatch's central
+question: its VMEM working set scales with the factor sizes, not the
+nonzero count, and once ``Σ I_pad·slab·gi`` outgrew the budget the
+dispatch fell all the way back to the HBM-materializing paths. This
+package is the next level of the hierarchy — the same FLYCOO insight
+("keep the big operand in slow memory, stream row tiles on a sorted
+index stream") applied to the factor matrices themselves:
+
+  * :mod:`repro.oocore.planner` — the **unified residency planner**:
+    one :class:`~repro.oocore.planner.ResidencyPlan` decides, per mode
+    and under an explicit byte budget, which factors stay whole-VMEM,
+    which are rank-slabbed, and which are row-streamed through the
+    ``fused_mttkrp_nmode_gather_stream`` kernel's bounded tile window.
+    ``kernels.mttkrp.ops.select_backend`` and ``tune.model.plan_modes``
+    consume it instead of their former ad-hoc VMEM checks.
+  * :mod:`repro.oocore.executor` — **chunked execution**: splits a
+    FLYCOO nonzero stream whose working set exceeds a byte budget into
+    row-tile-aligned chunks, runs each through the same kernels with
+    the running accumulator threaded as ``out_init`` (single-pass
+    accumulation order, bit-exact), and counts the DMA traffic.
+
+``python -m repro.oocore`` runs a forced-multi-chunk smoke check (CI).
+
+The executor is imported lazily: it pulls in ``kernels.mttkrp.ops``,
+which itself imports :mod:`repro.oocore.planner` — eager import here
+would be circular.
+"""
+from . import planner  # noqa: F401
+from .planner import (FactorResidency, ResidencyPlan, backend_fits,
+                      plan_residency)
+
+__all__ = [
+    "planner",
+    "executor",
+    "FactorResidency",
+    "ResidencyPlan",
+    "backend_fits",
+    "plan_residency",
+]
+
+
+def __getattr__(name):
+    if name == "executor":
+        # importlib, not `from . import …`: the fromlist machinery would
+        # re-enter this __getattr__ before the submodule import finishes.
+        import importlib
+        return importlib.import_module(".executor", __name__)
+    raise AttributeError(name)

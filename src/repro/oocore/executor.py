@@ -1,0 +1,270 @@
+"""Chunked out-of-core spMTTKRP execution over the streaming kernel.
+
+The kernels bound their *VMEM* working set, but a mode step still
+materializes its block-aligned operand streams whole: ``O(n_pad)``
+values/rows/indices (plus, for the materializing fused family,
+``O(n_pad·R̂)`` of gathered rows). For nonzero streams that outgrow a
+host/HBM working-set budget this module is the next level of the same
+out-of-core idea: split the FLYCOO stream into **row-tile-aligned
+chunks** of whole nonzero blocks, run every chunk through the same
+kernel, and thread the running accumulator through each call's
+``out_init`` so the result reproduces the single-pass accumulation
+order **bit-exactly** — chunking is a pure re-bracketing of the very
+same additions, never a re-ordering.
+
+Chunk boundaries prefer output-row-tile edges (a tile's run of blocks
+stays within one chunk, so most tiles are touched by exactly one chunk);
+when a single tile's run alone exceeds the budget the split lands
+mid-tile, which the ``out_init`` threading makes exact anyway.
+
+:func:`mttkrp_out_of_core` is the entry point; it uses
+:func:`repro.oocore.planner.plan_residency` for the window geometry and
+returns counted DMA-traffic statistics (`StreamStats`) next to the
+result — the numbers ``benchmarks/bench_oocore.py`` records.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.mttkrp import kernel as _kernel
+from ..kernels.mttkrp import ops as _ops
+from . import planner as _planner
+
+__all__ = [
+    "StreamStats",
+    "chunk_boundaries",
+    "mttkrp_out_of_core",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamStats:
+    """Counted traffic of one chunked out-of-core mode step.
+
+    All byte counts are *counted* from the actual tile schedules (not
+    timed): what the kernel's DMA engine is asked to move. The three
+    tile-fetch counts bound each other —
+    ``pipelined <= scheduled`` and ``distinct <= scheduled`` —
+    ``scheduled`` being the naive every-slot-every-block cost,
+    ``distinct`` what the schedule actually references (padding slots
+    repeat a block's first tile), and ``pipelined`` what survives the
+    Pallas revolving-buffer rule (a slot whose tile index is unchanged
+    from the previous grid step is not re-fetched).
+    """
+
+    backend: str
+    chunks: int
+    num_blocks: int
+    nnz: int                        # valid nonzeros
+    blk: int
+    rank_padded: int
+    rank_slabs: int
+    window_tiles: tuple[int, ...]   # per input mode
+    chunk_block_counts: tuple[int, ...]
+    scheduled_tile_bytes: int
+    distinct_tile_bytes: int
+    pipelined_tile_bytes: int
+    index_stream_bytes: int         # vals + rows + K index streams, per slab
+    window_vmem_bytes: int          # resident window per grid step
+    resident_equiv_vmem_bytes: int  # what whole-factor residency would need
+
+    @property
+    def tile_bytes_per_nnz(self) -> float:
+        return self.pipelined_tile_bytes / max(self.nnz, 1)
+
+    @property
+    def index_bytes_per_nnz(self) -> float:
+        return self.index_stream_bytes / max(self.nnz, 1)
+
+
+def chunk_boundaries(tile_of_block, max_blocks: int) -> list[tuple[int, int]]:
+    """Split ``num_blocks`` blocks into chunks of at most ``max_blocks``.
+
+    Boundaries prefer output-row-tile edges: a chunk ends at the last
+    position ``<= max_blocks`` where ``tile_of_block`` changes, so a
+    tile's contiguous run of blocks stays in one chunk whenever it fits.
+    A run longer than ``max_blocks`` is split mid-tile (the executor's
+    ``out_init`` threading keeps that exact). Returns ``[start, stop)``
+    block ranges covering every block exactly once.
+    """
+    tiles = np.asarray(tile_of_block)
+    num_blocks = len(tiles)
+    assert max_blocks >= 1, max_blocks
+    bounds = []
+    start = 0
+    while start < num_blocks:
+        stop = min(start + max_blocks, num_blocks)
+        if stop < num_blocks:
+            aligned = stop
+            while aligned > start + 1 and tiles[aligned] == tiles[aligned - 1]:
+                aligned -= 1
+            if aligned > start and tiles[aligned] != tiles[aligned - 1]:
+                stop = aligned
+        bounds.append((start, stop))
+        start = stop
+    return bounds
+
+
+def _schedule_fetch_stats(scheds, chunks, frow_tile: int, slab_cols: int,
+                          num_slabs: int, gi: int,
+                          distinct_counts) -> tuple[int, int, int]:
+    """Counted (scheduled, distinct, pipelined) tile-fetch bytes."""
+    tile_bytes = frow_tile * slab_cols * gi
+    scheduled = sum(int(s.shape[0]) * int(s.shape[1]) for s in scheds)
+    distinct = sum(int(d.sum()) for d in distinct_counts)
+    pipelined = 0
+    for s in scheds:
+        s = np.asarray(s)
+        for start, stop in chunks:
+            c = s[start:stop]
+            if len(c) == 0:
+                continue
+            pipelined += c.shape[1]                       # first block: all
+            if len(c) > 1:
+                pipelined += int((c[1:] != c[:-1]).sum())  # slot changed
+    return (scheduled * tile_bytes * num_slabs,
+            distinct * tile_bytes * num_slabs,
+            pipelined * tile_bytes * num_slabs)
+
+
+def mttkrp_out_of_core(
+    idx, val, valid, factors, *, mode: int, rows_cap: int, row_offset=0,
+    blk: int = 128, tile_rows: int = 128,
+    vmem_budget: int = _planner.VMEM_BUDGET_BYTES,
+    max_chunk_bytes: int | None = None,
+    gather_dtype: str = "float32",
+    interpret: bool = True,
+):
+    """One mode step, out-of-core: streamed factor tiles + chunked blocks.
+
+    Same data contract as ``ops.mttkrp_device_step`` (sorted-by-output-row
+    stream, trailing invalids, replicated factor matrices), executed
+    through ``fused_mttkrp_nmode_gather_stream`` in chunks:
+
+      * the factor matrices stay HBM-resident; per input mode the kernel
+        holds a bounded window of ``FACTOR_ROW_TILE``-row tiles in VMEM
+        (widths from :func:`planner.plan_residency`, tightened to the
+        measured per-block distinct-tile maximum — the executor sees the
+        data, so unlike the jit dispatch it doesn't need the worst-case
+        bound);
+      * the block stream is split by :func:`chunk_boundaries` so no
+        chunk's aligned operand arrays (values + rows + index streams +
+        schedules) exceed ``max_chunk_bytes`` (``None`` = one chunk);
+      * each chunk's kernel call receives the previous accumulator as
+        ``out_init`` — the summation order is identical to the unchunked
+        kernel, so the result is **bit-exact** against the resident
+        gather backend for any chunk split.
+
+    Returns ``(out, stats)`` — ``out`` is ``(rows_cap, R)`` float32,
+    ``stats`` a :class:`StreamStats` of counted DMA traffic.
+    """
+    if gather_dtype not in ("float32", "bfloat16"):
+        raise ValueError(f"unknown gather_dtype {gather_dtype!r}")
+    gdt = jnp.bfloat16 if gather_dtype == "bfloat16" else jnp.float32
+    gi = 2 if gather_dtype == "bfloat16" else 4
+    frow = _kernel.FACTOR_ROW_TILE
+    idx = jnp.asarray(idx)
+    val = jnp.asarray(val)
+    valid = jnp.asarray(valid)
+    nmodes = idx.shape[1]
+    in_modes = [w for w in range(nmodes) if w != mode]
+    k = len(in_modes)
+    rank = factors[mode].shape[-1]
+    rpad = _ops.padded_rank(rank)
+    num_slabs = rpad // _kernel.RANK_SLAB
+
+    # Block-aligned streams, exactly like the in-jit gather paths.
+    local_row = (idx[:, mode] - row_offset).astype(jnp.int32)
+    local_row = jnp.where(valid, local_row, 0)
+    n_pad = _ops.n_pad_for(local_row.shape[0], rows_cap, blk, tile_rows)
+    slot, tile_of_block = _ops.build_block_layout(
+        local_row, valid, rows_cap=rows_cap, blk=blk, tile_rows=tile_rows)
+    v_al = _ops._align_to_blocks(jnp.where(valid, val, 0.0), slot, n_pad)
+    r_al = _ops._align_to_blocks(
+        (local_row % tile_rows).astype(jnp.int32), slot, n_pad)
+    idx_in = jnp.stack([idx[:, w] for w in in_modes], axis=1)
+    idx_in = jnp.where(valid[:, None], idx_in, 0).astype(jnp.int32)
+    idx_al = _ops._align_to_blocks(idx_in, slot, n_pad)
+    fmats = tuple(
+        _ops._pad_factor_rows(_ops.pad_rank(jnp.asarray(factors[w]).astype(gdt)),
+                              frow)
+        for w in in_modes)
+
+    # Window widths: the planner's static bound, tightened by the data.
+    # One sorted-distinct analysis serves the window sizing, the tile
+    # schedules and the fetch statistics (ops.tile_schedule re-derives
+    # the same thing jit-side for the in-jit dispatch path; out here the
+    # data is already on host, so doing it once in numpy is the cheap
+    # route for streams long enough to need chunking).
+    tiles_np = np.asarray(idx_al) // frow                 # (n_pad, K)
+    per_block = tiles_np.reshape(-1, blk, k)
+    st = np.sort(per_block, axis=1)
+    first = np.concatenate(
+        [np.ones((st.shape[0], 1, k), bool), st[:, 1:] != st[:, :-1]], axis=1)
+    rank_of = np.cumsum(first, axis=1) - 1                # distinct rank
+    distinct_counts = [first[:, :, i].sum(axis=1) for i in range(k)]
+    windows = tuple(
+        int(min(_planner.stream_window_tiles(blk, int(fmats[i].shape[0])),
+                max(1, int(distinct_counts[i].max()))))
+        for i in range(k))
+    num_blocks_total = st.shape[0]
+    scheds = []
+    for i in range(k):
+        width = windows[i]
+        # Same construction as ops.tile_schedule: first occurrences
+        # scatter to their distinct rank, duplicates to a dump column,
+        # unfilled slots keep the block's first (smallest) tile.
+        dest = np.where(first[:, :, i], rank_of[:, :, i], width)
+        sched = np.broadcast_to(
+            st[:, :1, i], (num_blocks_total, width + 1)).copy()
+        sched[np.arange(num_blocks_total)[:, None], dest] = st[:, :, i]
+        scheds.append(jnp.asarray(sched[:, :width].astype(np.int32)))
+    scheds = tuple(scheds)
+
+    # Chunking: bound each chunk's aligned-operand bytes.
+    num_blocks = n_pad // blk
+    per_block_bytes = blk * (4 + 4 + 4 * k) + 4 * sum(windows)
+    if max_chunk_bytes is None:
+        max_blocks = num_blocks
+    else:
+        max_blocks = max(1, max_chunk_bytes // per_block_bytes)
+    chunks = chunk_boundaries(tile_of_block, max_blocks)
+
+    out = jnp.zeros((rows_cap, rpad), jnp.float32)
+    for start, stop in chunks:
+        sl = slice(start * blk, stop * blk)
+        out = _kernel.fused_mttkrp_nmode_gather_stream(
+            v_al[sl], idx_al[sl], fmats, r_al[sl],
+            tile_of_block[start:stop],
+            tuple(s[start:stop] for s in scheds),
+            rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
+            interpret=interpret, out_init=out)
+
+    slab_cols = min(rpad, _kernel.RANK_SLAB)
+    scheduled_b, distinct_b, pipelined_b = _schedule_fetch_stats(
+        scheds, chunks, frow, slab_cols, num_slabs, gi, distinct_counts)
+    stats = StreamStats(
+        backend=_planner.STREAM_BACKEND,
+        chunks=len(chunks),
+        num_blocks=num_blocks,
+        nnz=int(np.asarray(valid).sum()),
+        blk=blk,
+        rank_padded=rpad,
+        rank_slabs=num_slabs,
+        window_tiles=windows,
+        chunk_block_counts=tuple(stop - start for start, stop in chunks),
+        scheduled_tile_bytes=scheduled_b,
+        distinct_tile_bytes=distinct_b,
+        pipelined_tile_bytes=pipelined_b,
+        index_stream_bytes=num_slabs * n_pad * (4 + 4 + 4 * k),
+        window_vmem_bytes=_kernel.gather_stream_vmem_bytes(
+            k, rpad, blk, tile_rows, windows, gather_itemsize=gi),
+        resident_equiv_vmem_bytes=_kernel.gather_vmem_bytes(
+            k, rpad, blk, tile_rows,
+            sum(int(f.shape[0]) for f in fmats), gather_itemsize=gi),
+    )
+    return out[:, :rank], stats

@@ -1,0 +1,330 @@
+"""Unified factor-residency planner for the MTTKRP backend dispatch.
+
+Before this module, the "does it fit?" question was answered in three
+places with three ad-hoc rule sets: ``ops.select_backend``'s static
+ladder, the per-family guards in ``ops``'s table-validation path, and
+``tune.model._feasible``'s copy of both. Every one of them was really
+asking the same thing: **under a byte budget, what residency can the
+per-mode factor operands afford?** This module owns that question.
+
+:func:`plan_residency` returns a :class:`ResidencyPlan` — the full
+decision for one mode step: the chosen backend, the per-input-factor
+residency policy (``whole`` / ``slab`` / ``stream``), the VMEM bytes the
+choice costs, and the stream-window geometry when the out-of-core
+kernel is chosen. The policies map 1:1 onto the kernel families:
+
+  ``whole``   the factor matrix is VMEM-resident across the grid sweep
+              (``fused_mttkrp_nmode_gather``);
+  ``slab``    one ``RANK_SLAB``-wide column slab of the factor is
+              resident per slab pass (``fused_mttkrp_nmode_gather_tiled``);
+  ``stream``  the factor stays **HBM-resident** and ``window_tiles``
+              slots of ``FACTOR_ROW_TILE`` rows are DMA'd through VMEM
+              per nonzero block (``fused_mttkrp_nmode_gather_stream``) —
+              the out-of-core regime this package adds.
+
+When even streaming cannot be certified (factor sizes unknown, or the
+window itself overflows), the plan degrades through the materializing
+family exactly as the pre-oocore dispatch did: fused → rank-tiled fused
+→ ``pallas``.
+
+The ladder is *monotone in the budget* by construction: every
+feasibility predicate is ``bytes ≤ budget``, so growing the budget can
+only move the decision toward earlier (more-resident) rungs — a
+property ``tests/test_oocore.py`` sweeps.
+
+Consumers: ``kernels.mttkrp.ops.select_backend`` (static decision +
+calibration-table validation), ``tune.model.plan_modes`` (per-mode tuned
+planning), ``oocore.executor`` (window geometry + chunk budgeting).
+This module imports only ``kernels.mttkrp.kernel`` (the byte formulas),
+never ``ops`` — ops imports *us*.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from ..kernels.mttkrp import kernel as _kernel
+
+__all__ = [
+    "FACTOR_ROW_TILE",
+    "MIN_MXU_RANK",
+    "VMEM_BUDGET_BYTES",
+    "STREAM_BACKEND",
+    "FactorResidency",
+    "ResidencyPlan",
+    "backend_fits",
+    "padded_rank",
+    "plan_residency",
+    "stream_window_tiles",
+]
+
+FACTOR_ROW_TILE = _kernel.FACTOR_ROW_TILE
+
+# Below this rank the one-hot MXU matmul pads R to MXU_RANK_MULTIPLE and
+# wastes >= 16x of the array; the XLA segment-sum reference wins.
+# (kernel.py owns these shared constants — it is the only module in the
+# dispatch triangle with no intra-repo imports, so ops.py and this
+# planner can alias one definition whichever is imported first.)
+MIN_MXU_RANK = _kernel.MIN_MXU_RANK
+
+# Per-core VMEM working-set budget (half of a v5e core's ~128 MiB VMEM —
+# the same theta=0.5 cache-fraction stance as the paper's Eq. 3).
+VMEM_BUDGET_BYTES = _kernel.VMEM_BUDGET_BYTES
+
+# The out-of-core backend this package adds to ops.BACKENDS.
+STREAM_BACKEND = _kernel.STREAM_BACKEND_NAME
+
+
+# R rounded up to the MXU lane multiple — aliased from kernel.py, the
+# single source shared with ops.py's dispatch arithmetic.
+padded_rank = _kernel.padded_rank
+
+
+def factor_row_tiles(rows: int, frow_tile: int = FACTOR_ROW_TILE) -> int:
+    """Number of ``frow_tile``-row tiles covering a ``rows``-row factor."""
+    return max(1, -(-rows // frow_tile))
+
+
+def stream_window_tiles(blk: int, rows: int,
+                        frow_tile: int = FACTOR_ROW_TILE) -> int:
+    """Correctness bound on the stream kernel's per-mode window width.
+
+    A block of ``blk`` nonzeros touches at most ``blk`` distinct factor
+    row tiles, and never more tiles than the factor has — so a window of
+    ``min(blk, ceil(rows / frow_tile))`` slots always holds every tile a
+    block needs, for any index distribution. The executor may shrink
+    this with measured per-block distinct-tile counts; the static
+    dispatch (which cannot look at data) plans with the bound.
+    """
+    return min(blk, factor_row_tiles(rows, frow_tile))
+
+
+@dataclasses.dataclass(frozen=True)
+class FactorResidency:
+    """Residency of one input-factor matrix under a :class:`ResidencyPlan`."""
+
+    rows: int                   # factor rows (I_pad of the input mode)
+    policy: str                 # "whole" | "slab" | "stream"
+    window_tiles: int           # FACTOR_ROW_TILE-row tiles resident per pass
+    rank_cols: int              # rank columns resident per pass
+    resident_bytes: int         # VMEM bytes this factor holds per grid step
+
+    @property
+    def row_tiles(self) -> int:
+        """Total row tiles of this factor (streamed tiles partition them)."""
+        return factor_row_tiles(self.rows)
+
+    def tile_spans(self) -> list[tuple[int, int]]:
+        """Disjoint ``[start, stop)`` row ranges, one per row tile.
+
+        The streaming schedule fetches whole tiles; these spans are the
+        units it fetches. They must partition ``[0, rows)`` exactly —
+        every factor row covered exactly once — which
+        ``tests/test_oocore.py`` asserts as a plan invariant.
+        """
+        return [(t * FACTOR_ROW_TILE, min(self.rows, (t + 1) * FACTOR_ROW_TILE))
+                for t in range(self.row_tiles)]
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidencyPlan:
+    """One mode step's residency decision under a byte budget."""
+
+    backend: str                        # the certified kernels.mttkrp backend
+    nmodes: int
+    rank: int
+    blk: int
+    tile_rows: int
+    vmem_budget: int
+    gather_itemsize: int
+    vmem_bytes: int                     # working set of the chosen backend
+    rank_slabs: int                     # slab passes the choice implies
+    window_tiles: tuple[int, ...]       # per input mode; () unless streaming
+    factors: tuple[FactorResidency, ...]  # () when factor sizes are unknown
+
+    @property
+    def streams(self) -> bool:
+        return self.backend == STREAM_BACKEND
+
+    @property
+    def fits(self) -> bool:
+        """Did the chosen backend's working set fit the budget?
+
+        ``pallas`` is the only rung allowed to exceed it (last resort:
+        its block working set is what it is), and ``ref`` never competes
+        for VMEM at all.
+        """
+        return self.vmem_bytes <= self.vmem_budget \
+            or self.backend in ("pallas", "ref")
+
+
+def _normalize_factor_rows(factor_rows, num_in_modes: int):
+    """``factor_rows`` as (per-mode tuple | None, total | None).
+
+    Callers know the factor sizes at three fidelities: not at all
+    (``None`` — a purely shape-keyed dispatch query), as the total row
+    count ``Σ I_pad`` (the historical ``select_backend`` int), or
+    per input mode (``mttkrp_device_step``, the executor). Aggregate
+    ints plan the stream window conservatively, as if every input
+    factor had all the rows.
+    """
+    if factor_rows is None:
+        return None, None
+    if isinstance(factor_rows, (list, tuple)):
+        per_mode = tuple(int(r) for r in factor_rows)
+        assert len(per_mode) == num_in_modes, (per_mode, num_in_modes)
+        return per_mode, sum(per_mode)
+    total = int(factor_rows)
+    return None, total
+
+
+def backend_fits(backend: str, *, nmodes: int, rank: int, blk: int,
+                 tile_rows: int, factor_rows=None,
+                 vmem_budget: int = VMEM_BUDGET_BYTES,
+                 gather_itemsize: int = 4) -> bool:
+    """Hard VMEM feasibility of one backend — the single predicate.
+
+    This is what bounds a calibration table's preference in
+    ``select_backend`` and filters ``plan_modes``' candidate pool: a
+    measured-fast backend whose working set cannot be certified under
+    the budget is an extrapolation and must be discarded. Non-Pallas
+    and materializing-last-resort backends (``ref``, ``segsum``,
+    ``pallas``) always "fit" — they manage their own memory. The
+    ``*_bf16`` names fold into ``gather_itemsize=2``.
+    """
+    if backend.endswith("_bf16"):
+        backend = backend[:-len("_bf16")]
+        gather_itemsize = 2
+    k, rpad = nmodes - 1, padded_rank(rank)
+    if backend == "pallas_fused":
+        return _kernel.fused_vmem_bytes(
+            k, rpad, blk, tile_rows,
+            gather_itemsize=gather_itemsize) <= vmem_budget
+    if backend == "pallas_fused_tiled":
+        return _kernel.fused_tiled_vmem_bytes(
+            k, rpad, blk, tile_rows,
+            gather_itemsize=gather_itemsize) <= vmem_budget
+    per_mode, total = _normalize_factor_rows(factor_rows, k)
+    if backend == "pallas_fused_gather":
+        return total is not None and _kernel.gather_vmem_bytes(
+            k, rpad, blk, tile_rows, total,
+            gather_itemsize=gather_itemsize) <= vmem_budget
+    if backend == "pallas_fused_gather_tiled":
+        return total is not None and _kernel.gather_tiled_vmem_bytes(
+            k, rpad, blk, tile_rows, total,
+            gather_itemsize=gather_itemsize) <= vmem_budget
+    if backend == STREAM_BACKEND:
+        if total is None:
+            return False
+        windows = (tuple(stream_window_tiles(blk, r) for r in per_mode)
+                   if per_mode is not None
+                   else (stream_window_tiles(blk, total),) * k)
+        return _kernel.gather_stream_vmem_bytes(
+            k, rpad, blk, tile_rows, windows,
+            gather_itemsize=gather_itemsize) <= vmem_budget
+    # ref / pallas / segsum (and anything dispatched a layer up).
+    return True
+
+
+def _factor_states(per_mode, total, k: int, policy: str, blk: int,
+                   rank_cols: int, gi: int) -> tuple[FactorResidency, ...]:
+    rows_list = per_mode if per_mode is not None else (total,) * k
+    states = []
+    for rows in rows_list:
+        if policy == "stream":
+            w = stream_window_tiles(blk, rows)
+            # A window covering every tile of the factor is de-facto
+            # whole residency — the plan records it honestly.
+            pol = "whole" if w >= factor_row_tiles(rows) else "stream"
+            resident = w * FACTOR_ROW_TILE * rank_cols * gi
+        else:
+            pol, w = policy, factor_row_tiles(rows)
+            resident = rows * rank_cols * gi
+        states.append(FactorResidency(
+            rows=rows, policy=pol, window_tiles=w, rank_cols=rank_cols,
+            resident_bytes=resident))
+    return tuple(states)
+
+
+def plan_residency(*, nmodes: int, rank: int, blk: int = 512,
+                   tile_rows: int = 128, factor_rows=None,
+                   vmem_budget: int = VMEM_BUDGET_BYTES,
+                   gather_itemsize: int = 4,
+                   allow_stream: bool = True) -> ResidencyPlan:
+    """The full static residency ladder for one mode step.
+
+    In order (each rung = one feasibility predicate against
+    ``vmem_budget``; the first that holds wins, so the decision is
+    monotone in the budget):
+
+      1. ``rank < MIN_MXU_RANK`` → ``ref`` (MXU-padding waste);
+      2. factors whole-VMEM        → ``pallas_fused_gather``;
+      3. one rank slab resident    → ``pallas_fused_gather_tiled``;
+      4. bounded tile window fits  → ``pallas_fused_gather_stream``
+         (the out-of-core rung — factors stay in HBM);
+      5. fused working set fits    → ``pallas_fused``;
+      6. one fused rank slab fits  → ``pallas_fused_tiled``;
+      7. otherwise                 → ``pallas``.
+
+    Rungs 2–4 need ``factor_rows`` (an int total, or a per-input-mode
+    sequence for exact stream windows); without it they are skipped and
+    the decision is bit-identical to the pre-gather dispatch.
+    ``allow_stream=False`` removes rung 4 (the pre-oocore ladder).
+    """
+    k, rpad = nmodes - 1, padded_rank(rank)
+    gi = gather_itemsize
+    kw = dict(nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows,
+              vmem_budget=vmem_budget, gather_itemsize=gi)
+    per_mode, total = _normalize_factor_rows(factor_rows, k)
+
+    def finish(backend, vmem_bytes, rank_slabs=1, window=(), factors=()):
+        return ResidencyPlan(
+            backend=backend, vmem_bytes=int(vmem_bytes),
+            rank_slabs=rank_slabs, window_tiles=tuple(window),
+            factors=tuple(factors), **kw)
+
+    if rank < MIN_MXU_RANK:
+        return finish("ref", 0)
+    slabs = rpad // _kernel.RANK_SLAB
+    if total is not None:
+        if backend_fits("pallas_fused_gather", factor_rows=factor_rows,
+                        **kw):
+            return finish(
+                "pallas_fused_gather",
+                _kernel.gather_vmem_bytes(k, rpad, blk, tile_rows, total,
+                                          gather_itemsize=gi),
+                factors=_factor_states(per_mode, total, k, "whole", blk,
+                                       rpad, gi))
+        if backend_fits("pallas_fused_gather_tiled",
+                        factor_rows=factor_rows, **kw):
+            return finish(
+                "pallas_fused_gather_tiled",
+                _kernel.gather_tiled_vmem_bytes(
+                    k, rpad, blk, tile_rows, total, gather_itemsize=gi),
+                rank_slabs=slabs,
+                factors=_factor_states(per_mode, total, k, "slab", blk,
+                                       min(rpad, _kernel.RANK_SLAB), gi))
+        if allow_stream and backend_fits(STREAM_BACKEND,
+                                         factor_rows=factor_rows, **kw):
+            windows = (tuple(stream_window_tiles(blk, r) for r in per_mode)
+                       if per_mode is not None
+                       else (stream_window_tiles(blk, total),) * k)
+            return finish(
+                STREAM_BACKEND,
+                _kernel.gather_stream_vmem_bytes(
+                    k, rpad, blk, tile_rows, windows, gather_itemsize=gi),
+                rank_slabs=slabs, window=windows,
+                factors=_factor_states(per_mode, total, k, "stream", blk,
+                                       min(rpad, _kernel.RANK_SLAB), gi))
+    if backend_fits("pallas_fused", **kw):
+        return finish("pallas_fused",
+                      _kernel.fused_vmem_bytes(k, rpad, blk, tile_rows,
+                                               gather_itemsize=gi))
+    if backend_fits("pallas_fused_tiled", **kw):
+        return finish("pallas_fused_tiled",
+                      _kernel.fused_tiled_vmem_bytes(
+                          k, rpad, blk, tile_rows, gather_itemsize=gi),
+                      rank_slabs=slabs)
+    return finish("pallas",
+                  _kernel.fused_vmem_bytes(0, rpad, blk, tile_rows,
+                                           gather_itemsize=gi))

@@ -46,9 +46,10 @@ def cmd_show(args) -> int:
     for k, v in sorted(table.meta.items()):
         print(f"meta.{k}={v}")
     if "upgraded_from_schema" in table.meta:
-        print("note: table pre-dates the current backend set (the "
-              "rank-tiled / bf16 / in-kernel-gather backends are "
-              "unmeasured and factor_rows is unrecorded); re-run "
+        print("note: table pre-dates the current backend set (the newest "
+              "of the rank-tiled / bf16 / in-kernel-gather / out-of-core "
+              "gather-stream backends are unmeasured, and factor_rows / "
+              "stream_window_tiles may be unrecorded); re-run "
               "`python -m repro.tune calibrate` to time them")
     for key in table.shape_keys():
         nmodes, rank, blk, tile_rows = key

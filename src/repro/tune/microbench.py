@@ -6,10 +6,10 @@ factor matrices — timed through every backend:
 
   * the ``kernels.mttkrp.ops.BACKENDS`` family (``pallas_fused``,
     ``pallas``, ``pallas_fused_tiled``, ``pallas_fused_bf16``, the
-    in-kernel-gather ``pallas_fused_gather`` trio, ``ref``) via
-    ``mttkrp_device_step`` (interpret mode on CPU — the timings rank
-    the backends' *emulated* cost; on a real TPU the same harness
-    calibrates compiled kernels);
+    in-kernel-gather ``pallas_fused_gather`` trio, the out-of-core
+    ``pallas_fused_gather_stream``, ``ref``) via ``mttkrp_device_step``
+    (interpret mode on CPU — the timings rank the backends' *emulated*
+    cost; on a real TPU the same harness calibrates compiled kernels);
   * ``segsum`` — the plain-XLA segment-sum path used by
     ``core.distributed.device_mttkrp``.
 
@@ -45,6 +45,7 @@ __all__ = [
     "default_grid",
     "make_case",
     "case_factor_rows",
+    "case_stream_window_tiles",
     "stub_measure",
     "calibrate",
 ]
@@ -122,6 +123,19 @@ def case_factor_rows(point: GridPoint) -> int:
     return (point.nmodes - 1) * _SIDE_DIM
 
 
+def case_stream_window_tiles(point: GridPoint) -> int:
+    """Per-input-mode stream-window width of the synthetic case.
+
+    What ``pallas_fused_gather_stream`` holds in VMEM per mode when it
+    runs the case: the ``repro.oocore`` planner's correctness bound for
+    ``_SIDE_DIM``-row factors at this block size. Recorded in every v4
+    calibration entry so a stream timing carries its window context.
+    """
+    from ..oocore.planner import stream_window_tiles
+
+    return stream_window_tiles(point.blk, _SIDE_DIM)
+
+
 def stub_measure(backend: str, point: GridPoint) -> float:
     """Deterministic pseudo-timings from the traffic model (no kernels run).
 
@@ -146,6 +160,11 @@ def stub_measure(backend: str, point: GridPoint) -> float:
             0.075 + 5e-5 * k + 2e-5 * point.tile_rows,
         "pallas_fused_gather_bf16":
             0.03 + 3e-5 * k + 2e-5 * point.tile_rows,
+        # Streaming re-fetches window tiles per block: slower than the
+        # resident gathers, still ahead of the materializing fused path
+        # on traffic — mirroring the counted per-nonzero bytes.
+        "pallas_fused_gather_stream":
+            0.08 + 6e-5 * k + 2e-5 * point.tile_rows + 1e-5 * point.blk,
     }[backend]
 
 
@@ -221,6 +240,7 @@ def calibrate(
             nmodes=point.nmodes, rank=point.rank, blk=point.blk,
             tile_rows=point.tile_rows, density=point.density,
             timings_s=timings, factor_rows=case_factor_rows(point),
+            stream_window_tiles=case_stream_window_tiles(point),
         ))
         if verbose:
             best = entries[-1].best

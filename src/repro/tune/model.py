@@ -29,41 +29,31 @@ import numpy as np
 
 from ..core.distributed import ModePlan
 from ..kernels.mttkrp.ops import (AUTO_BACKENDS, MIN_MXU_RANK,
-                                  MXU_RANK_MULTIPLE, fused_fits_vmem,
-                                  gather_fits_vmem, padded_rank,
+                                  MXU_RANK_MULTIPLE, padded_rank,
                                   select_backend)
+from ..oocore import planner as _planner
 
 __all__ = ["CostModel", "compare_dispatch", "plan_modes"]
 
 
 def _feasible(backends, nmodes: int, rank: int, blk: int, tile_rows: int,
-              *, covered: bool, factor_rows: int | None = None):
+              *, covered: bool, factor_rows=None):
     """Filter ``backends`` by the same hard constraints select_backend's
-    table path applies: fused working sets must fit VMEM (per family —
-    untiled / rank-tiled / bf16-gather / in-kernel gather), and no MXU
-    one-hot backend below ``MIN_MXU_RANK`` unless that rank was actually
-    measured (``covered`` — below-grid extrapolation is not evidence).
-    The gather family additionally needs ``factor_rows`` (its resident
-    set is the factor matrices themselves); ``None`` rules it out."""
+    table path applies: per-family VMEM feasibility via the one
+    ``repro.oocore`` residency authority
+    (:func:`repro.oocore.planner.backend_fits` — the gather family,
+    streaming included, needs ``factor_rows`` to certify; ``None`` rules
+    it out), and no MXU one-hot backend below ``MIN_MXU_RANK`` unless
+    that rank was actually measured (``covered`` — below-grid
+    extrapolation is not evidence)."""
     out = []
     for b in backends:
         if rank < MIN_MXU_RANK and not covered and b.startswith("pallas"):
             continue
-        if b == "pallas_fused" and not fused_fits_vmem(
-                nmodes, rank, blk, tile_rows):
+        if not _planner.backend_fits(b, nmodes=nmodes, rank=rank, blk=blk,
+                                     tile_rows=tile_rows,
+                                     factor_rows=factor_rows):
             continue
-        if b == "pallas_fused_tiled" and not fused_fits_vmem(
-                nmodes, rank, blk, tile_rows, tiled=True):
-            continue
-        if b == "pallas_fused_bf16" and not fused_fits_vmem(
-                nmodes, rank, blk, tile_rows, gather_itemsize=2):
-            continue
-        if b.startswith("pallas_fused_gather"):
-            if factor_rows is None or not gather_fits_vmem(
-                    nmodes, rank, blk, tile_rows, factor_rows,
-                    tiled=b.endswith("_tiled"),
-                    gather_itemsize=2 if b.endswith("_bf16") else 4):
-                continue
         out.append(b)
     return out
 
@@ -240,11 +230,12 @@ def plan_modes(table, ft, rank: int, *,
     for n in range(ft.nmodes):
         rows_per_worker = max(1, ft.modes[n].rows_cap)
         # Replicated input-factor rows this mode's gather kernel would
-        # hold resident (Σ i_pad over non-output modes; the final
+        # hold resident (per-mode i_pad over non-output modes; the final
         # tile-rounding of rows_cap adds at most D·tile_rows per mode —
-        # noise against the VMEM budget).
-        factor_rows = sum(D * ft.modes[w].rows_cap
-                          for w in range(ft.nmodes) if w != n)
+        # noise against the VMEM budget). The per-mode tuple lets the
+        # residency planner size exact stream windows.
+        factor_rows = tuple(D * ft.modes[w].rows_cap
+                            for w in range(ft.nmodes) if w != n)
         best = None
         for blk, tile_rows in model.shape_candidates(ft.nmodes):
             num_tiles = max(1, -(-rows_per_worker // tile_rows))
@@ -276,7 +267,11 @@ def plan_modes(table, ft, rank: int, *,
         _, blk, tile_rows, backend = best
         slabs = (padded_rank(rank) // MXU_RANK_MULTIPLE
                  if backend in ("pallas_fused_tiled",
-                                "pallas_fused_gather_tiled") else 1)
+                                "pallas_fused_gather_tiled",
+                                _planner.STREAM_BACKEND) else 1)
+        window = (tuple(_planner.stream_window_tiles(blk, r)
+                        for r in factor_rows)
+                  if backend == _planner.STREAM_BACKEND else ())
         plans.append(ModePlan(backend=backend, blk=blk, tile_rows=tile_rows,
-                              rank_slabs=slabs))
+                              rank_slabs=slabs, window_tiles=window))
     return tuple(plans)

@@ -29,6 +29,13 @@ Version history (full field reference in ``experiments/tune/README.md``):
     shape key. v1/v2 tables load under v3 with ``factor_rows=None``
     (and no gather timings), so the dispatch simply never follows the
     table onto a gather backend for them.
+  * v4 — the out-of-core streaming backend
+    (``pallas_fused_gather_stream``, ``repro.oocore``) joins the
+    measured set, and each entry records ``stream_window_tiles`` — the
+    per-input-mode VMEM tile-window width of the measured case —
+    because a gather-stream timing is only transferable to dispatch
+    keys whose planned window is comparable. v1–v3 tables load under
+    v4 with ``stream_window_tiles=None`` (and no stream timings).
 """
 from __future__ import annotations
 
@@ -57,10 +64,10 @@ __all__ = [
     "load_table",
 ]
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 # Older schema versions from_json still understands (upgraded on load).
-COMPAT_SCHEMA_VERSIONS = (1, 2)
+COMPAT_SCHEMA_VERSIONS = (1, 2, 3)
 
 # Backends ``kernels.mttkrp.ops.mttkrp_device_step`` can run itself —
 # ``segsum`` dispatches one layer up (core.distributed.device_mttkrp).
@@ -94,6 +101,12 @@ class CalibrationEntry:
     # None on entries loaded from pre-v3 tables: the dispatch then never
     # follows the table onto a gather backend for this key.
     factor_rows: int | None = None
+    # Per-input-mode VMEM tile-window width of the measured case's
+    # gather-stream run (``repro.oocore.planner.stream_window_tiles``) —
+    # context for interpreting the ``pallas_fused_gather_stream``
+    # timing. None on entries loaded from pre-v4 tables (which carry no
+    # stream timings anyway).
+    stream_window_tiles: int | None = None
 
     @property
     def best(self) -> str:
@@ -111,11 +124,13 @@ class CalibrationEntry:
             tile_rows=self.tile_rows, density=self.density,
             timings_s={k: float(v) for k, v in self.timings_s.items()},
             factor_rows=self.factor_rows,
+            stream_window_tiles=self.stream_window_tiles,
         )
 
     @classmethod
     def from_json(cls, obj: dict) -> "CalibrationEntry":
         factor_rows = obj.get("factor_rows")
+        window = obj.get("stream_window_tiles")
         return cls(
             nmodes=int(obj["nmodes"]), rank=int(obj["rank"]),
             blk=int(obj["blk"]), tile_rows=int(obj["tile_rows"]),
@@ -123,6 +138,7 @@ class CalibrationEntry:
             timings_s={str(k): float(v)
                        for k, v in obj["timings_s"].items()},
             factor_rows=None if factor_rows is None else int(factor_rows),
+            stream_window_tiles=None if window is None else int(window),
         )
 
 

@@ -258,10 +258,13 @@ def test_table_cannot_pick_uncertifiable_gather():
     # unknown factor sizes: discarded, static decision applies
     assert kops.select_backend("auto", table=table,
                                **kw) == "pallas_fused"
-    # infeasible factor sizes: discarded too
+    # infeasible resident factor sizes: the preference is discarded just
+    # the same; since PR 5 the static ladder then lands on the
+    # out-of-core streamed gather (its bounded tile window fits at this
+    # blk even though whole/slab residency cannot).
     assert kops.select_backend("auto", table=table,
                                factor_rows=600_000_000,
-                               **kw) == "pallas_fused"
+                               **kw) == kops.STREAM_BACKEND
 
 
 # ---------------------------------------------------------------------------
