@@ -1,0 +1,34 @@
+"""Compiled-path lowering status: every backend × geometry, as data.
+
+Not a timing benchmark — a *capability* artifact. Each row records
+whether one ``(backend, geometry)`` point lowers to Mosaic with
+``interpret=False`` (the AOT ``trace().lower(lowering_platforms=
+("tpu",))`` path, CPU-only, no execution) plus the lowering wall time.
+``BENCH_lowering.json`` is the checked-in evidence behind the
+"lowers (Mosaic)" column of ``docs/kernels.md``'s backend matrix —
+``tests/check_docs.py`` syncs the column against this file, so the
+docs can only claim what a sweep actually demonstrated.
+
+Quick = the CI smoke grid (3 geometries/backend); ``--full`` = the
+slow 7-geometry grid from ``repro.kernels.mttkrp.lowering``.
+"""
+from __future__ import annotations
+
+from repro.kernels.mttkrp import lowering as klow
+
+from .common import row, write_bench_json
+
+
+def run(quick: bool = True) -> list[dict]:
+    geometries = klow.SMOKE_GEOMETRIES if quick else klow.FULL_GEOMETRIES
+    results = klow.run(geometries)
+    rows = [row("lowering", grid="smoke" if quick else "full", **r.row())
+            for r in results]
+    n_ok = sum(r.ok for r in results)
+    rows.append(row("lowering_summary",
+                    grid="smoke" if quick else "full",
+                    points=len(results), lowered_ok=n_ok,
+                    backends=len(set(r.backend for r in results)),
+                    all_backends_lower=all(r.ok for r in results)))
+    write_bench_json("lowering", rows)
+    return rows

@@ -56,7 +56,7 @@ def _stream_rows(quick: bool) -> list[dict]:
         resident = kops.mttkrp_device_step(
             jnp.asarray(idx), jnp.asarray(val), jnp.asarray(valid), factors,
             mode=mode, rows_cap=rows_cap, row_offset=0, blk=_BLK,
-            tile_rows=_TILE, interpret=True, backend="pallas_fused_gather")
+            tile_rows=_TILE, backend="pallas_fused_gather")
         got, stats = mttkrp_out_of_core(
             idx, val, valid, factors, mode=mode, rows_cap=rows_cap,
             blk=_BLK, tile_rows=_TILE, max_chunk_bytes=4096)

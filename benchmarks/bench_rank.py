@@ -96,7 +96,7 @@ def run(quick: bool = True, scale: float = 1.0):
         t_m = timeit(mat, warmup=1, iters=2)
         # contrib write+read the fused kernel never pays, per mode sweep —
         # the counted-traffic comparison. Wall times are labeled *_interp_s:
-        # both backends run under Pallas interpret=True on CPU here, so they
+        # both backends run in the Pallas interpreter on CPU here, so they
         # measure emulation overhead, not the compiled-kernel HBM win.
         saved = t4.nmodes * t4.nnz * 2 * rank * 4
         fused_rows.append(row(

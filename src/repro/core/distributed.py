@@ -282,10 +282,12 @@ def device_mttkrp(idx, val, mask, factors, mode: int, rt: DynasorRuntime,
     dev = jax.lax.axis_index(AXIS)
     rows_cap = rt.rows_cap[mode]
     if backend != "segsum":
+        # interpret/compiled comes from the repro.runtime.execution
+        # policy (the default), never a per-call hardcode.
         return kops.mttkrp_device_step(
             idx, val, mask, factors, mode=mode, rows_cap=rows_cap,
             row_offset=dev * rows_cap, blk=plan.blk,
-            tile_rows=plan.tile_rows, interpret=True, backend=backend,
+            tile_rows=plan.tile_rows, backend=backend,
             gather_dtype=rt.gather_dtype,
         )
     # segsum: plain XLA segment-sum path (dry-run / TPU-lowerable default).

@@ -96,7 +96,7 @@ def mttkrp_sorted(indices, values, factors, mode: int, out_rows: int,
 )
 def mttkrp_fused(indices, values, factors, mode: int, out_rows: int, *,
                  blk: int = 512, tile_rows: int = 128,
-                 backend: str = "auto", interpret: bool = True,
+                 backend: str = "auto", interpret: bool | None = None,
                  gather_dtype: str = "float32"):
     """Single-device spMTTKRP through the fused N-mode Pallas path.
 

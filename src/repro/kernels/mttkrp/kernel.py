@@ -43,8 +43,11 @@ Kernel matrix (see ops.py for the dispatch layer that picks between them):
                               full replicated factor matrices (VMEM-resident
                               across grid steps) plus a block-aligned
                               ``(n_pad, N−1)`` int32 index stream, and forms
-                              each nonzero's factor rows with ``jnp.take``
-                              in the body. The gathered operands never
+                              each nonzero's factor rows in the body
+                              (one-hot MXU matmul when compiled — the
+                              ``gather`` primitive has no Mosaic lowering —
+                              ``jnp.take`` in the interpreter; bitwise
+                              identical). The gathered operands never
                               exist in HBM at all — the per-nonzero stream
                               shrinks from ``(N−1)·R̂·4`` B of rows to
                               ``(N−1)·4`` B of indices.
@@ -78,6 +81,16 @@ Grid: one step per nonzero block. ``tile_of_block`` is scalar-prefetched and
 drives the output BlockSpec index_map. The output is zero-initialized via
 ``input_output_aliases`` (an aliased zeros operand), so empty tiles stay
 zero without needing a first-visit flag.
+
+Execution mode: every entry point takes ``interpret: bool | None``.
+``None`` — the default everywhere — resolves through
+:mod:`repro.runtime.execution`, the session-wide
+interpret / compiled / auto policy with capability probing; a bool is an
+explicit per-call override (the lowering harness passes ``False``).
+Compiled (Mosaic) geometry constraint: the rank-1 ``(blk,)`` scalar-stream
+blocks require ``blk`` to be a multiple of 128 (the interpreter accepts
+any ``blk``); ``tests/test_lowering.py`` lowers every kernel wrapper with
+``interpret=False`` to keep the compiled path honest on CPU-only hosts.
 """
 from __future__ import annotations
 
@@ -243,12 +256,11 @@ def gather_stream_vmem_bytes(num_in_modes: int, rank_padded: int, blk: int,
 
     The factors are *not* resident: per input mode only ``window_tiles``
     slots of ``frow_tile`` factor rows are held in VMEM (one rank slab
-    wide — the stream kernel always composes with the rank-slab axis),
-    plus the per-block ``(1, window_tiles)`` int32 tile-schedule block.
+    wide — the stream kernel always composes with the rank-slab axis).
     ``window_tiles`` may be a single int applied to every input mode or
-    a per-mode sequence. The scalar-prefetched schedule copy lives in
-    SMEM and — like ``tile_of_block`` in every other kernel's
-    accounting — is not counted here.
+    a per-mode sequence. The scalar-prefetched schedules live in SMEM
+    (the body reads them scalar-by-scalar) and — like ``tile_of_block``
+    in every other kernel's accounting — are not counted here.
     """
     gi = itemsize if gather_itemsize is None else gather_itemsize
     if isinstance(window_tiles, int):
@@ -256,8 +268,7 @@ def gather_stream_vmem_bytes(num_in_modes: int, rank_padded: int, blk: int,
     assert len(window_tiles) == num_in_modes, (window_tiles, num_in_modes)
     slab = min(rank_padded, rank_slab)
     windows = sum(w * frow_tile * slab * gi for w in window_tiles)
-    schedules = sum(window_tiles) * 4          # (1, W) int32 blocks
-    return windows + schedules + fused_vmem_bytes(
+    return windows + fused_vmem_bytes(
         0, slab, blk, tile_rows, itemsize=itemsize,
         index_stream_modes=num_in_modes)
 
@@ -273,6 +284,54 @@ def _scatter_update(rows, contrib, tile_rows: int):
     )
 
 
+def _gather_rows(matrix, idx, *, onehot: bool):
+    """In-kernel row gather: ``out[i] = matrix[idx[i]]`` → ``(B, R)`` fp32.
+
+    Two bitwise-identical implementations behind one switch:
+
+      * ``onehot=False`` — ``jnp.take``. The cheap form (O(B) work) the
+        interpreter runs, but the ``gather`` primitive it lowers to has
+        no Pallas TPU (Mosaic) lowering rule.
+      * ``onehot=True`` — the MXU form, the gather mirror of
+        :func:`_scatter_update`: ``onehot(idx, I) (B×I) @ matrix (I×R)``
+        on the systolic array. This is what the compiled path uses.
+
+    Equivalence is exact for in-range indices and any finite data: each
+    output row is ``1.0·matrix[idx[i]]`` plus exact ``+0.0`` terms, and a
+    bf16 ``matrix`` promotes to fp32 losslessly (the ``take`` form's
+    bf16 rows promote identically at the Hadamard multiply) — so
+    interpret and compiled execution stay bit-exact against each other.
+    tests/test_lowering.py locks the equivalence down.
+    """
+    if not onehot:
+        return jnp.take(matrix, idx, axis=0)
+    iota = jax.lax.broadcasted_iota(
+        jnp.int32, (idx.shape[0], matrix.shape[0]), 1)
+    sel = (idx[:, None] == iota).astype(matrix.dtype)
+    return jax.lax.dot_general(
+        sel, matrix,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _resolve_interpret(interpret):
+    """Resolve a per-call ``interpret`` override against the session policy.
+
+    ``None`` — the default on every kernel entry point — defers to
+    :mod:`repro.runtime.execution` (the one ``execution_mode`` switch:
+    interpret / compiled / auto with capability probing). A bool is an
+    explicit per-call override and wins. The policy module is imported
+    lazily so this module keeps its no-import-time-intra-repo-deps
+    property (ops.py and the oocore planner both alias its constants and
+    may be imported in either order).
+    """
+    if interpret is not None:
+        return bool(interpret)
+    from ...runtime import execution as _execution
+    return _execution.default_interpret()
+
+
 @functools.partial(
     jax.jit, static_argnames=("rows_cap", "blk", "tile_rows", "interpret")
 )
@@ -284,7 +343,7 @@ def segment_accumulate(
     rows_cap: int,
     blk: int = 512,
     tile_rows: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Blocked segmented accumulation (scatter stage of spMTTKRP).
 
@@ -301,6 +360,7 @@ def segment_accumulate(
     Returns:
       ``(rows_cap, R)`` float32 accumulated output.
     """
+    interpret = _resolve_interpret(interpret)
     n_pad, rank = contrib.shape
     assert n_pad % blk == 0, (n_pad, blk)
     assert rows_cap % tile_rows == 0, (rows_cap, tile_rows)
@@ -375,7 +435,7 @@ def fused_mttkrp_nmode(
     rows_cap: int,
     blk: int = 512,
     tile_rows: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
     out_init=None,
 ):
     """N-mode fused variant: Hadamard product formed in VMEM, never in HBM.
@@ -404,6 +464,7 @@ def fused_mttkrp_nmode(
     Returns:
       ``(rows_cap, R)`` float32 accumulated output.
     """
+    interpret = _resolve_interpret(interpret)
     factor_rows = tuple(factor_rows)
     assert factor_rows, "need at least one input-factor operand"
     n_pad, rank = factor_rows[0].shape
@@ -462,7 +523,7 @@ def fused_mttkrp_nmode_tiled(
     blk: int = 512,
     tile_rows: int = 128,
     rank_slab: int = RANK_SLAB,
-    interpret: bool = True,
+    interpret: bool | None = None,
     out_init=None,
 ):
     """Rank-tiled N-mode fused variant: VMEM working set independent of R.
@@ -485,6 +546,7 @@ def fused_mttkrp_nmode_tiled(
     slab — ``2·4 B`` per nonzero per slab, negligible against the
     ``(N−1)·R·4 B`` gather traffic each slab pass moves anyway.
     """
+    interpret = _resolve_interpret(interpret)
     factor_rows = tuple(factor_rows)
     assert factor_rows, "need at least one input-factor operand"
     n_pad, rank = factor_rows[0].shape
@@ -531,17 +593,20 @@ def fused_mttkrp_nmode_tiled(
     )(tile_of_block, local_row_in_tile, vals, *factor_rows, out_init)
 
 
-def _fused_gather_body(*refs, tile_rows: int):
+def _fused_gather_body(*refs, tile_rows: int, onehot_gather: bool):
     """In-kernel gather + Hadamard + scatter (Alg. 2 lines 13-25 whole).
 
     Ref layout (positional, after scalar prefetch): ``tile_ref, row_ref,
     val_ref, idx_ref, factors_0 … factors_{K-1}, init_ref, out_ref``.
     Unlike :func:`_fused_nmode_body`, the factor refs here are the
     (replicated, VMEM-resident) factor *matrices*, not pre-gathered row
-    blocks: each nonzero's rows are formed by ``jnp.take`` on its int32
-    index stream inside the body, so the gathered operands never touch
-    HBM. The factor refs may be bf16 (bf16-gather variants); ``contrib``
-    starts fp32 so every product accumulates at fp32.
+    blocks: each nonzero's rows are formed by :func:`_gather_rows` on
+    its int32 index stream inside the body, so the gathered operands
+    never touch HBM. ``onehot_gather`` picks the gather form (one-hot
+    MXU matmul on the compiled path, ``jnp.take`` in the interpreter —
+    bitwise-identical). The factor refs may be bf16 (bf16-gather
+    variants); ``contrib`` starts fp32 so every product accumulates at
+    fp32.
 
     The same body serves the factor-resident and the rank-slabbed
     kernel: the BlockSpecs decide whether a factor ref covers the full
@@ -555,7 +620,8 @@ def _fused_gather_body(*refs, tile_rows: int):
     idx = idx_ref[...]
     contrib = val_ref[...][:, None].astype(jnp.float32)
     for w, f_ref in enumerate(factor_refs):
-        contrib = contrib * jnp.take(f_ref[...], idx[:, w], axis=0)
+        contrib = contrib * _gather_rows(f_ref[...], idx[:, w],
+                                         onehot=onehot_gather)
     update = _scatter_update(rows, contrib, tile_rows)
     out_ref[...] += update.astype(out_ref.dtype)
 
@@ -573,7 +639,7 @@ def fused_mttkrp_nmode_gather(
     rows_cap: int,
     blk: int = 512,
     tile_rows: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
     out_init=None,
 ):
     """Factor-resident in-kernel gather variant of the fused kernel.
@@ -604,6 +670,7 @@ def fused_mttkrp_nmode_gather(
     Returns:
       ``(rows_cap, R)`` float32 accumulated output.
     """
+    interpret = _resolve_interpret(interpret)
     factors = tuple(factors)
     assert factors, "need at least one input-factor matrix"
     n_pad, n_in = idx_stream.shape
@@ -642,7 +709,8 @@ def fused_mttkrp_nmode_gather(
     if out_init is None:
         out_init = jnp.zeros((rows_cap, rank), dtype=jnp.float32)
     return pl.pallas_call(
-        functools.partial(_fused_gather_body, tile_rows=tile_rows),
+        functools.partial(_fused_gather_body, tile_rows=tile_rows,
+                          onehot_gather=not interpret),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((rows_cap, rank), jnp.float32),
         # out_init -> out; operand index counts prefetch + row/val/idx +
@@ -668,7 +736,7 @@ def fused_mttkrp_nmode_gather_tiled(
     blk: int = 512,
     tile_rows: int = 128,
     rank_slab: int = RANK_SLAB,
-    interpret: bool = True,
+    interpret: bool | None = None,
     out_init=None,
 ):
     """Slab-streamed in-kernel gather: one rank slab of each factor resident.
@@ -688,6 +756,7 @@ def fused_mttkrp_nmode_gather_tiled(
     once per slab (``(2+K)·4`` B per nonzero per slab), still a factor
     ``R̂/rank_slab`` smaller than streaming pre-gathered rows.
     """
+    interpret = _resolve_interpret(interpret)
     factors = tuple(factors)
     assert factors, "need at least one input-factor matrix"
     n_pad, n_in = idx_stream.shape
@@ -728,7 +797,8 @@ def fused_mttkrp_nmode_gather_tiled(
     if out_init is None:
         out_init = jnp.zeros((rows_cap, rank), dtype=jnp.float32)
     return pl.pallas_call(
-        functools.partial(_fused_gather_body, tile_rows=tile_rows),
+        functools.partial(_fused_gather_body, tile_rows=tile_rows,
+                          onehot_gather=not interpret),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((rows_cap, rank), jnp.float32),
         # out_init -> out; operand index counts prefetch + row/val/idx +
@@ -739,32 +809,37 @@ def fused_mttkrp_nmode_gather_tiled(
 
 
 def _fused_gather_stream_body(*refs, tile_rows: int, num_in_modes: int,
-                              window_tiles: tuple, frow_tile: int):
+                              window_tiles: tuple, frow_tile: int,
+                              onehot_gather: bool):
     """Out-of-core gather: windowed factor tiles + Hadamard + scatter.
 
     Ref layout (positional): ``tile_ref, sched_pref_0 … sched_pref_{K-1}``
-    (scalar prefetch — consumed by the BlockSpec index maps, unused
-    here), then ``row_ref, val_ref, idx_ref, schedblk_0 … schedblk_{K-1},
+    (the scalar-prefetched SMEM schedules — consumed both by the
+    BlockSpec index maps *and* here), then ``row_ref, val_ref, idx_ref,
     win_{0,0} … win_{K-1,W_{K-1}-1}, init_ref, out_ref``. Each
     ``win_{w,j}`` is one ``(frow_tile, slab)`` VMEM slot whose HBM source
-    tile the prefetched schedule selected for this block; ``schedblk_w``
-    is the same schedule row as a ``(1, W_w)`` VMEM block so the body can
-    map each nonzero's global factor row to its window slot:
+    tile the prefetched schedule selected for this block. The body maps
+    each nonzero's global factor row to its window slot by scanning this
+    block's schedule row — read scalar-by-scalar from SMEM (a ``(1, W)``
+    VMEM copy would violate Mosaic's sublane tiling), the scan unrolled
+    over the static window width, reverse order so the *first* matching
+    slot wins:
 
-        slot  = argmax(global_row // frow_tile == schedule)   (first hit)
+        slot  = first j with  global_row // frow_tile == sched[b, j]
         local = slot · frow_tile + global_row % frow_tile
 
     The gathered values are bitwise the rows the factor-resident kernel
     would have gathered, so the arithmetic (and its order) is unchanged
     — streamed ≡ resident bit-exactly. Padding/invalid nonzeros may miss
-    every scheduled tile (argmax of all-False = slot 0); they then
+    every scheduled tile (no hit keeps the default slot 0); they then
     gather an arbitrary in-window row, harmless at value 0.
     """
     k = num_in_modes
+    sched_refs = refs[1:1 + k]
     row_ref, val_ref, idx_ref = refs[1 + k], refs[2 + k], refs[3 + k]
-    sched_refs = refs[4 + k:4 + 2 * k]
-    win_refs = refs[4 + 2 * k:-2]
+    win_refs = refs[4 + k:-2]
     out_ref = refs[-1]
+    b = pl.program_id(1)                     # grid = (slabs, blocks)
     rows = row_ref[...]
     idx = idx_ref[...]
     contrib = val_ref[...][:, None].astype(jnp.float32)
@@ -774,12 +849,13 @@ def _fused_gather_stream_body(*refs, tile_rows: int, num_in_modes: int,
         slots = [win_refs[off + j][...] for j in range(width)]
         off += width
         window = slots[0] if width == 1 else jnp.concatenate(slots, axis=0)
-        tiles_b = sched_refs[w][...][0]                    # (W_w,)
-        gtile = idx[:, w] // frow_tile
-        slot = jnp.argmax(gtile[:, None] == tiles_b[None, :],
-                          axis=1).astype(jnp.int32)
+        gtile = (idx[:, w] // frow_tile).astype(jnp.int32)
+        slot = jnp.zeros_like(gtile)
+        for j in range(width - 1, -1, -1):
+            slot = jnp.where(gtile == sched_refs[w][b, j], j, slot)
         local = slot * frow_tile + idx[:, w] % frow_tile
-        contrib = contrib * jnp.take(window, local, axis=0)
+        contrib = contrib * _gather_rows(window, local,
+                                         onehot=onehot_gather)
     update = _scatter_update(rows, contrib, tile_rows)
     out_ref[...] += update.astype(out_ref.dtype)
 
@@ -802,7 +878,7 @@ def fused_mttkrp_nmode_gather_stream(
     tile_rows: int = 128,
     frow_tile: int = FACTOR_ROW_TILE,
     rank_slab: int = RANK_SLAB,
-    interpret: bool = True,
+    interpret: bool | None = None,
     out_init=None,
 ):
     """Out-of-core in-kernel gather: HBM-resident factors, windowed tiles.
@@ -838,6 +914,7 @@ def fused_mttkrp_nmode_gather_stream(
 
     Returns ``(rows_cap, R)`` float32 accumulated output.
     """
+    interpret = _resolve_interpret(interpret)
     factors = tuple(factors)
     tile_schedules = tuple(tile_schedules)
     assert factors, "need at least one input-factor matrix"
@@ -863,12 +940,6 @@ def fused_mttkrp_nmode_gather_stream(
             pl.BlockSpec((blk,), lambda s, b, tiles, *scheds: (b,)),
             pl.BlockSpec((blk, n_in),
                          lambda s, b, tiles, *scheds: (b, 0)),
-        ]
-        + [
-            # This block's schedule row, as a VMEM operand for the body.
-            pl.BlockSpec((1, window_tiles[w]),
-                         lambda s, b, tiles, *scheds: (b, 0))
-            for w in range(n_in)
         ]
         + [
             # Window slot j of mode w: one frow_tile-row, rank_slab-wide
@@ -899,15 +970,16 @@ def fused_mttkrp_nmode_gather_stream(
         functools.partial(
             _fused_gather_stream_body, tile_rows=tile_rows,
             num_in_modes=n_in, window_tiles=window_tiles,
-            frow_tile=frow_tile),
+            frow_tile=frow_tile, onehot_gather=not interpret),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((rows_cap, rank), jnp.float32),
         # out_init -> out; operand index counts the 1+K prefetch args +
-        # row/val/idx + K schedule blocks + ΣW_w window slots.
-        input_output_aliases={4 + 2 * n_in + sum(window_tiles): 0},
+        # row/val/idx + ΣW_w window slots (the body reads the schedules
+        # straight from the SMEM prefetch refs — no VMEM copy).
+        input_output_aliases={4 + n_in + sum(window_tiles): 0},
         interpret=interpret,
     )(tile_of_block, *tile_schedules, local_row_in_tile, vals, idx_stream,
-      *tile_schedules, *window_operands, out_init)
+      *window_operands, out_init)
 
 
 def fused_mttkrp_3mode(
@@ -920,7 +992,7 @@ def fused_mttkrp_3mode(
     rows_cap: int,
     blk: int = 512,
     tile_rows: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Deprecated alias: the 3-mode special case of the N-mode kernel.
 

@@ -383,7 +383,7 @@ def tile_schedule(indices_aligned, blk: int, window: int,
 )
 def mttkrp_blocked(contrib, local_row, valid, *, rows_cap: int,
                    blk: int = 512, tile_rows: int = 128,
-                   interpret: bool = True, use_ref: bool = False):
+                   interpret: bool | None = None, use_ref: bool = False):
     """Scatter stage on a sorted stream via the Pallas kernel.
 
     ``use_ref=True`` routes to the pure-jnp oracle (A/B testing and the
@@ -420,7 +420,8 @@ def mttkrp_blocked(contrib, local_row, valid, *, rows_cap: int,
 )
 def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
                        row_offset, blk: int = 512, tile_rows: int = 128,
-                       interpret: bool = True, backend: str = "pallas",
+                       interpret: bool | None = None,
+                       backend: str = "pallas",
                        gather_dtype: str = "float32"):
     """Full per-device mode step: gather → Hadamard → blocked scatter.
 
@@ -434,6 +435,10 @@ def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
       mode: output mode.
       rows_cap: owned output rows.
       row_offset: scalar — first owned permuted row (``device_id*rows_cap``).
+      interpret: ``None`` (default) defers to the
+        :mod:`repro.runtime.execution` policy (interpret / compiled /
+        auto); a bool forces the Pallas interpreter (True) or Mosaic
+        compilation (False) for this call.
       backend: one of :data:`BACKENDS` or ``auto`` (decision matrix in
         ``docs/kernels.md``).
       gather_dtype: ``"float32"`` | ``"bfloat16"`` — dtype the fused

@@ -40,7 +40,7 @@ def main(argv=None) -> int:
     resident = kops.mttkrp_device_step(
         jnp.asarray(idx), jnp.asarray(val), jnp.asarray(valid), factors,
         mode=mode, rows_cap=rows_cap, row_offset=0, blk=blk,
-        tile_rows=tile_rows, interpret=True, backend="pallas_fused_gather")
+        tile_rows=tile_rows, backend="pallas_fused_gather")
     out, stats = mttkrp_out_of_core(
         idx, val, valid, factors, mode=mode, rows_cap=rows_cap, blk=blk,
         tile_rows=tile_rows, max_chunk_bytes=2000)

@@ -137,7 +137,7 @@ def mttkrp_out_of_core(
     vmem_budget: int = _planner.VMEM_BUDGET_BYTES,
     max_chunk_bytes: int | None = None,
     gather_dtype: str = "float32",
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """One mode step, out-of-core: streamed factor tiles + chunked blocks.
 

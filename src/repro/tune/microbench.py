@@ -203,10 +203,14 @@ def _real_measure(*, seed: int, warmup: int, iters: int) -> Callable:
             step = jax.jit(_segsum_step, static_argnames=("rows_cap",))
             fn = lambda: step(idx, val, valid, factors, rows_cap=rows_cap)
         else:
+            # Execution mode comes from the repro.runtime.execution
+            # policy: interpret on CPU hosts, compiled on TPU — the same
+            # resolution the production dispatch uses, so a table
+            # calibrated on hardware times real Mosaic kernels.
             fn = lambda: kops.mttkrp_device_step(
                 idx, val, valid, factors, mode=0, rows_cap=rows_cap,
                 row_offset=0, blk=point.blk, tile_rows=point.tile_rows,
-                interpret=True, backend=backend,
+                backend=backend,
             )
         return _time(fn, warmup=warmup, iters=iters)
 

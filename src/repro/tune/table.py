@@ -267,8 +267,16 @@ def measured_best(agg: dict, allowed=None) -> str | None:
 
 
 def host_meta(extra: dict | None = None) -> dict:
-    """Host fingerprint stored in ``meta`` — identifies where timings ran."""
+    """Host fingerprint stored in ``meta`` — identifies where timings ran.
+
+    Includes the :mod:`repro.runtime.execution` policy fingerprint
+    (``execution_mode`` / resolved ``interpret`` / probe reason) so a
+    table records whether its timings came from the interpreter or from
+    compiled Mosaic kernels — never a hardcoded assumption.
+    """
     import jax
+
+    from ..runtime import execution
 
     meta = dict(
         platform=platform.platform(),
@@ -276,7 +284,7 @@ def host_meta(extra: dict | None = None) -> dict:
         python=platform.python_version(),
         jax=jax.__version__,
         jax_backend=jax.default_backend(),
-        interpret=True,  # every Pallas call in this repo runs interpret on CPU
+        **execution.describe_meta(),
     )
     if extra:
         meta.update(extra)

@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Docs consistency checks — run by the CI `docs` job and by pytest.
 
-Two checks, both stdlib-only (no jax import, so the CI job needs
+Three checks, all stdlib-only (no jax import, so the CI job needs
 nothing but a Python interpreter):
 
 1. **Intra-repo markdown links resolve.** Every relative
@@ -16,11 +16,20 @@ nothing but a Python interpreter):
    read from the source with ``ast`` so adding a backend without
    documenting it (or vice versa) fails CI.
 
-Exit status 0 iff both checks pass; failures are printed one per line.
+3. **"lowers (Mosaic)" column ↔ BENCH_lowering.json sync.** The
+   matrix's lowering column may only say "yes" for a backend whose
+   every row in ``experiments/bench/BENCH_lowering.json`` (the artifact
+   the ``interpret=False`` AOT sweep writes) has ``lowered_ok``; a
+   backend the sweep saw fail must say "no". Dispatch-level rows
+   (no kernel to lower) must carry an em-dash. So the docs claim
+   exactly what the checked-in sweep demonstrated.
+
+Exit status 0 iff all checks pass; failures are printed one per line.
 """
 from __future__ import annotations
 
 import ast
+import json
 import os
 import re
 import sys
@@ -29,6 +38,9 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OPS_PATH = os.path.join(REPO_ROOT, "src", "repro", "kernels", "mttkrp",
                         "ops.py")
 KERNELS_DOC = os.path.join(REPO_ROOT, "docs", "kernels.md")
+LOWERING_BENCH = os.path.join(REPO_ROOT, "experiments", "bench",
+                              "BENCH_lowering.json")
+LOWERING_COLUMN = "lowers (Mosaic)"
 
 # Names the matrix documents beyond ops.BACKENDS: the auto resolver and
 # the distributed layer's plain-XLA path.
@@ -100,6 +112,84 @@ def documented_backends() -> set[str]:
     return names
 
 
+def matrix_cells() -> tuple[list[str], dict[str, list[str]]]:
+    """(header cells, {backend: row cells}) of the marked matrix."""
+    with open(KERNELS_DOC, encoding="utf-8") as f:
+        text = f.read()
+    block = text.split("<!-- BACKENDS:BEGIN -->", 1)[1] \
+                .split("<!-- BACKENDS:END -->", 1)[0]
+    header, rows = [], {}
+    for line in block.splitlines():
+        line = line.strip()
+        if not line.startswith("|") or set(line) <= {"|", "-", " "}:
+            continue
+        cells = [c.strip() for c in line.strip("|").split("|")]
+        m = _ROW_NAME_RE.match(line)
+        if m:
+            rows[m.group(1)] = cells
+        elif not header:
+            header = cells
+    return header, rows
+
+
+def lowering_status() -> dict[str, bool]:
+    """{backend: every sweep point lowered_ok} from BENCH_lowering.json."""
+    with open(LOWERING_BENCH, encoding="utf-8") as f:
+        data = json.load(f)
+    status: dict[str, bool] = {}
+    for row in data:
+        if row.get("bench") != "lowering":
+            continue
+        b = row["backend"]
+        status[b] = status.get(b, True) and bool(row["lowered_ok"])
+    return status
+
+
+def check_lowering_sync() -> list[str]:
+    """The matrix's "lowers (Mosaic)" column matches the sweep artifact."""
+    if not os.path.exists(LOWERING_BENCH):
+        return [f"{os.path.relpath(LOWERING_BENCH, REPO_ROOT)} is missing "
+                "— run `PYTHONPATH=src python -m benchmarks.run --only "
+                "lowering` and commit the artifact"]
+    errors = []
+    header, rows = matrix_cells()
+    if LOWERING_COLUMN not in header:
+        return [f"docs/kernels.md: matrix has no `{LOWERING_COLUMN}` "
+                "column"]
+    col = header.index(LOWERING_COLUMN)
+    status = lowering_status()
+    if not status:
+        return [f"{os.path.relpath(LOWERING_BENCH, REPO_ROOT)} has no "
+                "lowering rows"]
+    for name, cells in sorted(rows.items()):
+        if len(cells) <= col:
+            errors.append(f"docs/kernels.md: row `{name}` is short a "
+                          f"`{LOWERING_COLUMN}` cell")
+            continue
+        cell = cells[col]
+        if name in DISPATCH_LEVEL_NAMES:
+            if cell not in {"—", "-", "n/a"}:
+                errors.append(
+                    f"docs/kernels.md: dispatch-level `{name}` has no "
+                    f"kernel to lower; `{LOWERING_COLUMN}` must be an "
+                    f"em-dash, not {cell!r}")
+            continue
+        if name not in status:
+            errors.append(
+                f"docs/kernels.md: backend `{name}` has no rows in "
+                f"BENCH_lowering.json — extend the sweep before "
+                "claiming a lowering status")
+            continue
+        want = "yes" if status[name] else "no"
+        if not cell.startswith(want):
+            errors.append(
+                f"docs/kernels.md: `{name}` `{LOWERING_COLUMN}` says "
+                f"{cell!r} but BENCH_lowering.json records "
+                f"lowered_ok={status[name]} — the docs may only claim "
+                "what the sweep demonstrated")
+    return errors
+
+
 def check_backend_sync() -> list[str]:
     errors = []
     code = set(ops_backends())
@@ -120,13 +210,16 @@ def check_backend_sync() -> list[str]:
 def main() -> int:
     link_errors, checked = check_links()
     sync_errors = check_backend_sync()
-    for e in link_errors + sync_errors:
+    lowering_errors = check_lowering_sync()
+    for e in link_errors + sync_errors + lowering_errors:
         print(f"FAIL {e}")
-    if link_errors or sync_errors:
+    if link_errors or sync_errors or lowering_errors:
         return 1
     n_backends = len(ops_backends())
+    n_lower = sum(lowering_status().values())
     print(f"docs checks passed: {checked} markdown links resolve, "
-          f"{n_backends} backends in sync with docs/kernels.md")
+          f"{n_backends} backends in sync with docs/kernels.md, "
+          f"{n_lower} lowering statuses match BENCH_lowering.json")
     return 0
 
 

@@ -18,6 +18,19 @@ def test_kernels_doc_backends_in_sync():
     assert check_docs.check_backend_sync() == []
 
 
+def test_kernels_doc_lowering_column_in_sync():
+    assert check_docs.check_lowering_sync() == []
+
+
+def test_lowering_artifact_covers_every_backend():
+    # The committed BENCH_lowering.json must have a verdict for every
+    # backend the docs matrix claims a lowering status for.
+    from repro.kernels.mttkrp import ops as kops
+    status = check_docs.lowering_status()
+    assert set(status) == set(kops.BACKENDS)
+    assert all(status.values()), status
+
+
 def test_ast_parse_matches_live_module():
     from repro.kernels.mttkrp import ops as kops
     assert check_docs.ops_backends() == kops.BACKENDS
