@@ -40,12 +40,22 @@ def load(dirname):
     return cells
 
 
+# Suites whose rows are *counted* (bytes/decisions from static
+# arithmetic and schedules — identical on any host) and therefore worth
+# committing; every other suite's rows carry wall-clock timings that
+# only mean something on the host that measured them.
+COUNTED_SUITES = {"BENCH_lowering.json", "BENCH_oocore.json",
+                  "BENCH_dispatch.json"}
+
+
 def bench_inventory(bench_dir="experiments/bench"):
     """Summarize the BENCH_*.json artifacts (the survivors).
 
-    One line per artifact: suite name, row count, and the `bench=` row
-    kinds inside — enough to see at a glance which figures have data
-    without parsing each file.
+    One line per artifact: suite name, row count, the `bench=` row kinds
+    inside, and whether the suite is counted (host-independent, lives in
+    git) or timed (host-local, regenerate with `python -m
+    benchmarks.run`) — enough to see at a glance which figures have data
+    and which numbers are portable without parsing each file.
     """
     paths = sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
     print("\n### §Benchmarks — artifact inventory "
@@ -53,17 +63,19 @@ def bench_inventory(bench_dir="experiments/bench"):
     if not paths:
         print("(no artifacts; run `python -m benchmarks.run`)")
         return
-    print("| artifact | rows | row kinds |")
-    print("|---|---|---|")
+    print("| artifact | kind | rows | row kinds |")
+    print("|---|---|---|---|")
     for p in paths:
         name = os.path.basename(p)
+        kind = ("counted (committed)" if name in COUNTED_SUITES
+                else "timed (host-local)")
         try:
             with open(p) as f:
                 rows = json.load(f)
             kinds = sorted({r.get("bench", "?") for r in rows})
-            print(f"| {name} | {len(rows)} | {', '.join(kinds)} |")
+            print(f"| {name} | {kind} | {len(rows)} | {', '.join(kinds)} |")
         except (json.JSONDecodeError, OSError) as e:
-            print(f"| {name} | — | unreadable: {e} |")
+            print(f"| {name} | {kind} | — | unreadable: {e} |")
 
 
 def main():

@@ -27,11 +27,14 @@ import numpy as np
 from jax.sharding import Mesh
 
 from ..compat import shard_map as _shard_map
+from ..obs import counters as _obs
+from ..obs import tracer as _tracer
 from . import distributed as dist
 from .flycoo import FlycooTensor
 from .mttkrp import mttkrp as mttkrp_jax
 
-__all__ = ["CPResult", "cp_als", "cp_als_distributed", "fit_from_parts"]
+__all__ = ["CPResult", "cp_als", "cp_als_distributed", "fit_from_parts",
+           "make_instrumented_mode_fns"]
 
 
 @dataclasses.dataclass
@@ -106,8 +109,15 @@ def _sweep_jax(indices, values, factors, lam, shape: tuple[int, ...],
 
 
 def cp_als(tensor, rank: int, *, iters: int = 10, seed: int = 0,
-           tol: float = 1e-5) -> CPResult:
-    """Single-device CP-ALS (paper Alg. 1) — the correctness oracle."""
+           tol: float = 1e-5, tracer=None) -> CPResult:
+    """Single-device CP-ALS (paper Alg. 1) — the correctness oracle.
+
+    ``tracer`` (default: the process tracer, normally the no-op) records
+    one ``sweep`` span per ALS sweep; the whole sweep is a single jitted
+    call here, so there is no per-mode breakdown — use
+    :func:`cp_als_distributed` for the full span taxonomy.
+    """
+    tracer = _tracer.get_tracer() if tracer is None else tracer
     rng = np.random.default_rng(seed)
     factors = [jnp.asarray(rng.standard_normal((d, rank)), jnp.float32)
                for d in tensor.shape]
@@ -116,9 +126,12 @@ def cp_als(tensor, rank: int, *, iters: int = 10, seed: int = 0,
     val = jnp.asarray(tensor.values, jnp.float32)
     fits: list[float] = []
     for it in range(iters):
-        factors, lam, fit = _sweep_jax(idx, val, tuple(factors), lam,
-                                       tuple(tensor.shape), it == 0)
-        fits.append(float(fit))
+        with tracer.span("sweep", sweep=it, driver="single"):
+            factors, lam, fit = _sweep_jax(idx, val, tuple(factors), lam,
+                                           tuple(tensor.shape), it == 0)
+            fit = float(fit)
+        _obs.add("cpals.sweeps", driver="single")
+        fits.append(fit)
         if it > 0 and abs(fits[-1] - fits[-2]) < tol:
             break
     return CPResult([np.asarray(f) for f in factors], np.asarray(lam),
@@ -200,11 +213,101 @@ def make_als_sweep(rt: dist.DynasorRuntime, mesh: Mesh, *,
     return jax.jit(shmapped)
 
 
+def make_instrumented_mode_fns(rt: dist.DynasorRuntime, mesh: Mesh, *,
+                               backend: str = "segsum"):
+    """Per-mode jitted pieces for the *instrumented* stepped driver.
+
+    The production sweep (:func:`make_als_sweep`) is one jitted
+    ``shard_map`` call over all modes — nothing inside it can carry a
+    span boundary. When a tracer is enabled the driver instead steps
+    through per-mode jitted pieces so mttkrp/solve/remap get real
+    wall-time spans:
+
+      * ``mttkrp_fns[n](idx, val, mask, *factors)`` → the **full**
+        pre-solve MTTKRP ``(i_pad_n, R)``: each worker computes its
+        owned rows exactly as in the fused sweep and ``out_specs=
+        P(AXIS)`` concatenates them (owner-computes rows are contiguous
+        per worker, so the concatenation *is* the factor row space);
+      * ``remap_fns[n](idx, val, mask)`` → the ``n → n+1`` dynamic
+        remap, same per-transition capacities as the fused sweep.
+
+    The solve/normalize happens host-side on the full matrices — row-wise
+    identical to the fused sweep's owned-rows solve (``_solve_v`` acts
+    per row; a psum of local column sums equals the global sum) — so the
+    stepped driver converges like the production one while every phase
+    is observable. Counted metrics (dispatch, planner, remap bytes) are
+    identical by construction: the same ``device_mttkrp`` path traces
+    once per mode either way.
+    """
+    from jax.sharding import PartitionSpec as P
+    spec_t, spec_r = P(dist.AXIS), P()
+    mttkrp_fns, remap_fns = [], []
+    for n in range(rt.nmodes):
+        def mttkrp_inner(idx, val, mask, *factors, _n=n):
+            idx, val, mask = idx[0], val[0], mask[0]
+            return dist.device_mttkrp(idx, val, mask, list(factors), _n,
+                                      rt, backend)
+        mttkrp_fns.append(jax.jit(_shard_map(
+            mttkrp_inner, mesh=mesh,
+            in_specs=(spec_t, spec_t, spec_t) + (spec_r,) * rt.nmodes,
+            out_specs=spec_t)))
+
+        def remap_inner(idx, val, mask, _n=n):
+            idx, val, mask = idx[0], val[0], mask[0]
+            idx, val, mask, _ = dist.device_remap(
+                idx, val, mask, (_n + 1) % rt.nmodes, rt)
+            return idx[None], val[None], mask[None]
+        remap_fns.append(jax.jit(_shard_map(
+            remap_inner, mesh=mesh,
+            in_specs=(spec_t, spec_t, spec_t),
+            out_specs=(spec_t, spec_t, spec_t))))
+    return mttkrp_fns, remap_fns
+
+
+def _cp_als_distributed_traced(ft, rank, mesh, rt, idx, val, mask, *,
+                               iters, seed, tol, backend, tracer) -> CPResult:
+    """Stepped Dynasor CP-ALS under an enabled tracer (see above)."""
+    factors = [jnp.asarray(f) for f in dist.init_factors(ft, rt, seed=seed)]
+    lam = jnp.ones((rank,), jnp.float32)
+    mttkrp_fns, remap_fns = make_instrumented_mode_fns(rt, mesh,
+                                                       backend=backend)
+    x_norm_sq = jnp.float32(np.sum(ft.tensor.values.astype(np.float64) ** 2))
+    grams = [f.T @ f for f in factors]
+    fits: list[float] = []
+    for it in range(iters):
+        with tracer.span("sweep", sweep=it, driver="distributed"):
+            M = A = None
+            for n in range(rt.nmodes):
+                with tracer.span("mode", mode=n):
+                    with tracer.span("mttkrp", backend=backend):
+                        M = jax.block_until_ready(
+                            mttkrp_fns[n](idx, val, mask, *factors))
+                    with tracer.span("solve"):
+                        A = _solve_v(grams, n, M)
+                        A, norms = _normalize_columns(A, it == 0)
+                        A = jax.block_until_ready(A)
+                    factors[n] = A
+                    grams[n] = A.T @ A
+                    lam = norms
+                    with tracer.span("remap", transition=n):
+                        idx, val, mask = (jax.block_until_ready(
+                            remap_fns[n](idx, val, mask)))
+            fit = float(fit_from_parts(x_norm_sq, lam, grams, M, A))
+        _obs.add("cpals.sweeps", driver="distributed")
+        fits.append(fit)
+        if it > 0 and abs(fits[-1] - fits[-2]) < tol:
+            break
+    nat = [dist.unpermute_factor(ft, rt, n, np.asarray(f))
+           for n, f in enumerate(factors)]
+    return CPResult(nat, np.asarray(lam), fits, len(fits))
+
+
 def cp_als_distributed(ft: FlycooTensor, rank: int, mesh: Mesh, *,
                        iters: int = 10, seed: int = 0, tol: float = 1e-5,
                        backend: str = "segsum",
                        tile_rows: int = 8, table=None,
-                       gather_dtype: str = "float32") -> CPResult:
+                       gather_dtype: str = "float32",
+                       tracer=None) -> CPResult:
     """Distributed CP-ALS: FLYCOO layout + Dynasor sweeps on ``mesh``.
 
     Works for tensors of any order: with ``backend="pallas_fused"`` (or
@@ -216,11 +319,23 @@ def cp_als_distributed(ft: FlycooTensor, rank: int, mesh: Mesh, *,
     factor-row gathers on every fused-family mode step (fp32
     accumulate); the end-to-end fit impact is measured by
     ``benchmarks/bench_bf16_convergence.py``.
+
+    ``tracer`` defaults to the process tracer (``repro.obs``), normally
+    the no-op — the production path below stays untouched. An *enabled*
+    tracer switches to the stepped driver
+    (:func:`make_instrumented_mode_fns`): per-mode jitted pieces with
+    nested ``sweep → mode → mttkrp|solve|remap`` spans and identical
+    counted metrics.
     """
+    tracer = _tracer.get_tracer() if tracer is None else tracer
     rt, (idx, val, mask) = dist.prepare_runtime(ft, rank,
                                                 tile_rows=tile_rows,
                                                 table=table,
                                                 gather_dtype=gather_dtype)
+    if tracer.enabled:
+        return _cp_als_distributed_traced(
+            ft, rank, mesh, rt, idx, val, mask, iters=iters, seed=seed,
+            tol=tol, backend=backend, tracer=tracer)
     factors = [jnp.asarray(f) for f in dist.init_factors(ft, rt, seed=seed)]
     lam = jnp.ones((rank,), jnp.float32)
     sweep = make_als_sweep(rt, mesh, backend=backend)
@@ -232,6 +347,7 @@ def cp_als_distributed(ft: FlycooTensor, rank: int, mesh: Mesh, *,
         (idx, val, mask), factors, lam, fit = sweep(
             idx, val, mask, x_norm_sq, *factors, lam,
             jnp.asarray(it == 0))
+        _obs.add("cpals.sweeps", driver="distributed")
         fits.append(float(fit))
         if it > 0 and abs(fits[-1] - fits[-2]) < tol:
             break

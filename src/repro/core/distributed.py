@@ -45,6 +45,7 @@ from ..compat import shard_map as _shard_map
 from . import remap as remap_lib
 from .flycoo import FlycooTensor, pack_mode
 from ..kernels.mttkrp import ops as kops
+from ..obs import counters as _obs
 
 __all__ = [
     "AXIS",
@@ -193,6 +194,11 @@ def prepare_runtime(
     i_pad = tuple(D * rc for rc in rows_cap)
     blk = int(blk if blk is not None else min(ft.params.g, 512))
     caps = remap_lib.remap_capacities(ft)
+    # Count the per-transition all_to_all allocation here, once per
+    # runtime build — every driver (CP-ALS, benches, serving) that
+    # constructs a runtime gets its collective traffic into the obs
+    # registry without bench-side re-derivation.
+    _obs.record_remap_exchange(caps, D, ft.nmodes, uniform_cap=uniform_cap)
     rt = DynasorRuntime(
         num_workers=D, nmodes=ft.nmodes, rank=rank, rows_cap=rows_cap,
         i_pad=i_pad, nnz_cap=ft.nnz_cap,

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 
 from . import kernel as _kernel
 from . import ref as _ref
+from ...obs import counters as _obs
 from ...oocore import planner as _planner
 
 __all__ = [
@@ -251,12 +252,18 @@ def select_backend(
     → materialized ``pallas``. Rungs that need the factor sizes are
     skipped when ``factor_rows`` is ``None``.
     """
+    # Every resolution emits a ``dispatch.backend`` counter with the
+    # decision *and* why (explicit | table | static). select_backend runs
+    # at jit-trace time, so the count is once per unique static signature
+    # per process — host-independent, which is what lets the obs baseline
+    # gate pin dispatch decisions in CI.
     if backend != "auto":
         if backend not in BACKENDS:
             raise ValueError(
                 f"unknown MTTKRP backend {backend!r}: expected 'auto' or "
                 f"one of {BACKENDS} (the plain-XLA 'segsum' path is "
                 "handled by core.distributed.device_mttkrp)")
+        _obs.add("dispatch.backend", backend=backend, source="explicit")
         return backend
     if table is not None:
         # Below the MXU-padding threshold the table may only answer from
@@ -277,10 +284,13 @@ def select_backend(
                 vmem_budget=vmem_budget):
             choice = None               # infeasible extrapolation
         if choice is not None:
+            _obs.add("dispatch.backend", backend=choice, source="table")
             return choice
-    return _planner.plan_residency(
+    chosen = _planner.plan_residency(
         nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows,
         factor_rows=factor_rows, vmem_budget=vmem_budget).backend
+    _obs.add("dispatch.backend", backend=chosen, source="static")
+    return chosen
 
 
 def n_pad_for(cap: int, rows_cap: int, blk: int, tile_rows: int) -> int:

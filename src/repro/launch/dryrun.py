@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import ARCHS, SHAPES, get_config, skip_reason
+from ..obs import counters as _obs
 from ..models import steps as steps_lib
 from ..models.params import abstract_params, tree_shardings
 from ..models import model as model_lib
@@ -113,7 +114,9 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 "status": "skipped", "reason": reason}
     mesh = make_production_mesh(multi_pod=multi_pod)
     rules = steps_lib.rules_for(shape, cfg)
-    t0 = time.time()
+    # Monotonic clock (perf_counter), like every other timed module —
+    # time.time() is wall-clock and can step backwards under NTP.
+    t0 = time.perf_counter()
     with mesh:
         if shape.kind == "train":
             lowered, (fn, args) = _train_lowered(cfg, shape, mesh, rules)
@@ -121,9 +124,11 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             lowered, (fn, args) = _prefill_lowered(cfg, shape, mesh, rules)
         else:
             lowered, (fn, args) = _decode_lowered(cfg, shape, mesh, rules)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
+        _obs.add("dryrun.lower_s", t_lower, arch=arch, shape=shape_name)
+        _obs.add("dryrun.compile_s", t_compile, arch=arch, shape=shape_name)
         # loop-corrected global flops/bytes (cost_analysis counts while
         # bodies once — see launch/flops.py docstring)
         jcost = step_costs(fn, *args)

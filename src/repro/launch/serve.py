@@ -19,15 +19,21 @@ from ..configs import get_config, smoke_config
 from ..models import steps as steps_lib
 from ..models import model as model_lib
 from ..models.params import init_params
+from ..obs import counters as _obs
+from ..obs import tracer as _tracer_mod
 
 __all__ = ["ServeSession", "main"]
 
 
 class ServeSession:
-    def __init__(self, cfg, params, *, mesh=None, max_len: int = 128):
+    def __init__(self, cfg, params, *, mesh=None, max_len: int = 128,
+                 tracer=None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
+        # Default: resolve the process tracer per generate() call so a
+        # session built before `use_tracer(...)` still records into it.
+        self._tracer = tracer
         self._prefill = jax.jit(steps_lib.make_prefill_step(cfg, mesh))
         self._decode = jax.jit(steps_lib.make_decode_step(cfg, mesh),
                                donate_argnums=(1,))
@@ -36,26 +42,40 @@ class ServeSession:
                  temperature: float = 0.0, seed: int = 0,
                  extras: dict | None = None):
         """prompts: (b, l_prompt) int32 → (b, n_tokens) int32."""
+        tracer = self._tracer or _tracer_mod.get_tracer()
         b, lp = prompts.shape
         batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
         batch.update(extras or {})
-        logits, cache = self._prefill(self.params, batch)
-        # decode caches from prefill are sized (l_prompt); re-pad the
-        # attention K/V (+ scale) slots to max_len. Key-based: SSM states
-        # must NOT be padded.
-        cache = _pad_caches(cache, lp, self.max_len)
-        out = []
-        key = jax.random.key(seed)
-        tok = _sample(logits[:, -1, :], temperature, key, self.cfg.vocab)
-        out.append(tok)
-        for i in range(n_tokens - 1):
-            pos = jnp.int32(lp + i)
-            logits, cache = self._decode(self.params, cache, tok[:, None],
-                                         pos)
-            key = jax.random.fold_in(key, i)
+        with tracer.span("generate", batch=b, prompt_len=lp,
+                         tokens=n_tokens):
+            t0 = time.perf_counter()
+            with tracer.span("prefill"):
+                logits, cache = self._prefill(self.params, batch)
+                if tracer.enabled:
+                    logits = jax.block_until_ready(logits)
+            _obs.add("serve.prefill_s", time.perf_counter() - t0)
+            # decode caches from prefill are sized (l_prompt); re-pad the
+            # attention K/V (+ scale) slots to max_len. Key-based: SSM
+            # states must NOT be padded.
+            cache = _pad_caches(cache, lp, self.max_len)
+            out = []
+            key = jax.random.key(seed)
             tok = _sample(logits[:, -1, :], temperature, key, self.cfg.vocab)
             out.append(tok)
-        return np.stack([np.asarray(t) for t in out], axis=1)
+            t0 = time.perf_counter()
+            with tracer.span("decode", tokens=n_tokens - 1):
+                for i in range(n_tokens - 1):
+                    pos = jnp.int32(lp + i)
+                    logits, cache = self._decode(self.params, cache,
+                                                 tok[:, None], pos)
+                    key = jax.random.fold_in(key, i)
+                    tok = _sample(logits[:, -1, :], temperature, key,
+                                  self.cfg.vocab)
+                    out.append(tok)
+                result = np.stack([np.asarray(t) for t in out], axis=1)
+            _obs.add("serve.decode_s", time.perf_counter() - t0)
+            _obs.add("serve.tokens", b * n_tokens)
+        return result
 
 
 def _pad_caches(cache, prompt_len: int, max_len: int):

@@ -1,0 +1,56 @@
+"""repro.obs — span tracing, unified counters, and the CI baseline gate.
+
+The observability layer the rest of the stack emits into:
+
+* :mod:`repro.obs.counters` — the process-wide :class:`CounterRegistry`
+  with its closed, documented namespace (``oocore.dma.*``,
+  ``remap.a2a.*``, ``dispatch.backend``, …);
+* :mod:`repro.obs.tracer` — nested wall-time spans with per-span counter
+  deltas, Chrome-trace/Perfetto export, no-op by default;
+* :mod:`repro.obs.baseline` — the deterministic counted-metric baseline
+  CI gates on (``experiments/obs/BASELINE_counters.json``).
+
+CLI: ``python -m repro.obs report|export|validate|baseline``.
+Docs: ``docs/observability.md``.
+"""
+from .counters import (
+    NAMESPACES,
+    CounterRegistry,
+    add,
+    counter_key,
+    get_registry,
+    record_remap_exchange,
+    record_stream_stats,
+    split_key,
+    use_registry,
+)
+from .tracer import (
+    NULL,
+    NullTracer,
+    SpanRecord,
+    Tracer,
+    get_tracer,
+    set_tracer,
+    use_tracer,
+    validate_chrome_trace,
+)
+
+__all__ = [
+    "NAMESPACES",
+    "CounterRegistry",
+    "add",
+    "counter_key",
+    "get_registry",
+    "record_remap_exchange",
+    "record_stream_stats",
+    "split_key",
+    "use_registry",
+    "NULL",
+    "NullTracer",
+    "SpanRecord",
+    "Tracer",
+    "get_tracer",
+    "set_tracer",
+    "use_tracer",
+    "validate_chrome_trace",
+]

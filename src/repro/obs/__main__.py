@@ -1,0 +1,114 @@
+"""``python -m repro.obs`` — report / export / validate / baseline.
+
+Subcommands:
+
+* ``report``   — run the instrumented tiny CP-ALS workload (the baseline
+  workload) and print the span tree with per-span counter deltas plus
+  the counter registry.
+* ``export``   — same run, written as Chrome-trace JSON
+  (``--out trace.json``; load in ``chrome://tracing`` or Perfetto).
+* ``validate`` — schema-check an exported trace file (stdlib only, no
+  jax import); ``--expect sweep,mode,mttkrp`` additionally requires
+  those span names. This is CI's trace check.
+* ``baseline`` — run the counter-baseline gate (``--check``, the
+  default) or rewrite the committed artifact (``--update-baseline``).
+"""
+import json
+import os
+import sys
+
+# The instrumented workload needs a 4-device mesh; the device count is
+# locked at first jax init, so set it before anything imports jax. The
+# `validate` subcommand never imports jax and doesn't care.
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4")
+
+import argparse
+
+
+def _run_instrumented():
+    from . import baseline as _baseline
+    from . import tracer as _tracer_mod
+
+    tracer = _tracer_mod.Tracer()
+    current = _baseline.collect(tracer=tracer)
+    return tracer, current
+
+
+def cmd_report(args) -> int:
+    tracer, current = _run_instrumented()
+    print(tracer.render())
+    print()
+    print("counters:")
+    for k, v in sorted(current["counters"].items()):
+        print(f"  {k} = {v}")
+    return 0
+
+
+def cmd_export(args) -> int:
+    from . import baseline as _baseline
+
+    tracer, current = _run_instrumented()
+    path = tracer.write_chrome_trace(
+        args.out, meta={"workload": _baseline.WORKLOAD,
+                        "counters": current["counters"]})
+    print(f"wrote {path}: {len(tracer.records)} spans, "
+          f"{len(current['counters'])} counted metrics")
+    return 0
+
+
+def cmd_validate(args) -> int:
+    from .tracer import validate_chrome_trace
+
+    with open(args.path, encoding="utf-8") as f:
+        trace = json.load(f)
+    expect = [s for s in (args.expect or "").split(",") if s]
+    errors = validate_chrome_trace(trace, expect_names=expect)
+    for e in errors:
+        print(f"FAIL {e}")
+    if errors:
+        return 1
+    n = len(trace["traceEvents"])
+    print(f"trace valid: {n} events"
+          + (f", all expected span names present ({args.expect})"
+             if expect else ""))
+    return 0
+
+
+def cmd_baseline(args) -> int:
+    from . import baseline as _baseline
+
+    status, messages = _baseline.run_gate(update=args.update_baseline)
+    for m in messages:
+        print(m)
+    return status
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sub.add_parser("report", help="print the instrumented run's span tree")
+
+    p = sub.add_parser("export", help="export a Chrome-trace JSON")
+    p.add_argument("--out", default="obs_trace.json")
+
+    p = sub.add_parser("validate", help="schema-check a trace file")
+    p.add_argument("path")
+    p.add_argument("--expect", default="",
+                   help="comma-separated span names that must appear")
+
+    p = sub.add_parser("baseline", help="counter-baseline gate")
+    g = p.add_mutually_exclusive_group()
+    g.add_argument("--check", action="store_true", default=True)
+    g.add_argument("--update-baseline", action="store_true")
+
+    args = ap.parse_args(argv)
+    return {"report": cmd_report, "export": cmd_export,
+            "validate": cmd_validate, "baseline": cmd_baseline}[args.cmd](args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

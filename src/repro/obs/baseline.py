@@ -1,0 +1,210 @@
+"""The deterministic counter baseline — CI's silent-perf-change gate.
+
+The counted metrics in the obs registry (DMA bytes, remap exchange
+bytes, dispatch/planner decisions) are **host-independent**: they come
+from static arithmetic and data-dependent schedules, never from clocks.
+So one instrumented tiny run has exactly one right answer, and that
+answer is committed as ``experiments/obs/BASELINE_counters.json``. CI
+re-collects and diffs: a PR that changes a dispatch decision, a VMEM
+plan, a remap capacity, or a single counted DMA byte fails the gate
+until it either fixes the regression or *explicitly* re-baselines with
+``python -m repro.obs baseline --update-baseline`` (committing the new
+file, which makes the change reviewable instead of silent).
+
+What the gate covers (:data:`COUNTED_PREFIXES`): ``cpals.*``,
+``dispatch.*``, ``oocore.*``, ``planner.*``, ``remap.*``. Wall-time
+counters (``*_s`` suffixed) and ``execution.*`` / ``serve.*`` /
+``dryrun.*`` / ``tune.*`` events are host- or config-dependent and are
+filtered out before comparison.
+
+Determinism notes (why :func:`collect` is shaped the way it is):
+
+* dispatch/planner counters fire at **jit-trace time** — once per
+  unique static signature per process. A fresh CI process traces each
+  mode function exactly once; mid-process collection calls
+  ``jax.clear_caches()`` first so a previously traced signature counts
+  again.
+* Everything runs inside ``use_registry()`` so process history never
+  leaks into the collected snapshot.
+* The workload pins every degree of freedom: seeds, 4 workers, 2 sweeps
+  with ``tol=0.0`` (``abs(diff) < 0.0`` is never true → never
+  early-stops), and a forced-multichunk out-of-core step with the same
+  geometry as ``python -m repro.oocore``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+__all__ = [
+    "BASELINE_PATH",
+    "COUNTED_PREFIXES",
+    "collect",
+    "diff",
+    "load_baseline",
+    "run_gate",
+    "write_baseline",
+]
+
+# Repo-relative home of the committed baseline artifact.
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+BASELINE_PATH = os.path.join(_REPO_ROOT, "experiments", "obs",
+                             "BASELINE_counters.json")
+
+# Base-name prefixes whose counters are host-independent (counted, not
+# timed) and therefore eligible for the committed baseline.
+COUNTED_PREFIXES = ("cpals.", "dispatch.", "oocore.", "planner.", "remap.")
+
+# The pinned workload configuration — recorded in the artifact's meta so
+# a baseline mismatch can be reproduced byte-for-byte.
+WORKLOAD = dict(
+    tensor="enron", tensor_scale=0.05, tensor_seed=0,
+    num_workers=4, rank=16, iters=2, tol=0.0, backend="auto",
+    seed=0,
+    oocore=dict(shape=(20000, 40, 9000, 30), nnz=600, nnz_seed=3,
+                distribution="powerlaw", blk=32, tile_rows=8, rank=256,
+                mode=1, max_chunk_bytes=2000),
+)
+
+
+def _is_counted(key: str) -> bool:
+    from .counters import split_key
+
+    name, _ = split_key(key)
+    return name.startswith(COUNTED_PREFIXES) and not name.endswith("_s")
+
+
+def collect(tracer=None) -> dict:
+    """Run the pinned instrumented workload; return the baseline object.
+
+    Needs >= 4 jax devices (CI sets
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``; so does
+    ``python -m repro.obs``). Returns ``{"meta": ..., "counters": ...}``
+    with counters filtered to the host-independent set and values
+    int-ified (every counted metric is a whole number of bytes/events).
+    """
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from ..core import distributed as dist
+    from ..core.cpals import cp_als_distributed
+    from ..core.flycoo import build_flycoo
+    from ..core.tensors import frostt_like, random_sparse_tensor
+    from ..oocore.executor import mttkrp_out_of_core
+    from . import counters as _counters
+    from . import tracer as _tracer_mod
+
+    if jax.device_count() < WORKLOAD["num_workers"]:
+        raise RuntimeError(
+            f"baseline collection needs >= {WORKLOAD['num_workers']} jax "
+            f"devices, found {jax.device_count()} — set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=4 before importing "
+            "jax (python -m repro.obs does this for you)")
+    # Trace-time counters (dispatch/planner) fire once per compiled
+    # signature; drop cached traces so a mid-process collect counts the
+    # same events a fresh CI process would.
+    jax.clear_caches()
+    tracer = _tracer_mod.Tracer() if tracer is None else tracer
+    with _counters.use_registry() as reg, _tracer_mod.use_tracer(tracer):
+        w = WORKLOAD
+        t = frostt_like(w["tensor"], scale=w["tensor_scale"],
+                        seed=w["tensor_seed"])
+        ft = build_flycoo(t, w["num_workers"], m_bounds=(2, 8),
+                          g_bounds=(8, 64))
+        mesh = Mesh(np.array(jax.devices()[:w["num_workers"]]),
+                    (dist.AXIS,))
+        result = cp_als_distributed(
+            ft, w["rank"], mesh, iters=w["iters"], seed=w["seed"],
+            tol=w["tol"], backend=w["backend"], tracer=tracer)
+
+        # A forced-multichunk out-of-core step (same geometry as
+        # `python -m repro.oocore`): pins the oocore.dma.* byte counts.
+        oo = w["oocore"]
+        rng = np.random.default_rng(0)
+        oot = random_sparse_tensor(tuple(oo["shape"]), oo["nnz"],
+                                   seed=oo["nnz_seed"],
+                                   distribution=oo["distribution"])
+        order = np.argsort(oot.indices[:, oo["mode"]], kind="stable")
+        idx = oot.indices[order].astype(np.int32)
+        val = oot.values[order].astype(np.float32)
+        valid = np.ones(len(val), bool)
+        factors = [np.asarray(rng.standard_normal((d, oo["rank"])),
+                              np.float32) for d in oo["shape"]]
+        rows_cap = -(-oo["shape"][oo["mode"]] // oo["tile_rows"]) \
+            * oo["tile_rows"]
+        with tracer.span("oocore.baseline"):
+            mttkrp_out_of_core(
+                idx, val, valid, factors, mode=oo["mode"],
+                rows_cap=rows_cap, blk=oo["blk"],
+                tile_rows=oo["tile_rows"],
+                max_chunk_bytes=oo["max_chunk_bytes"])
+        snapshot = reg.snapshot()
+
+    counters = {k: int(v) for k, v in snapshot.items() if _is_counted(k)}
+    return {
+        "meta": {
+            "schema": 1,
+            "workload": WORKLOAD,
+            "counted_prefixes": list(COUNTED_PREFIXES),
+            "update_with": "PYTHONPATH=src python -m repro.obs baseline "
+                           "--update-baseline",
+            "final_fit": round(result.fits[-1], 6),
+        },
+        "counters": counters,
+    }
+
+
+def diff(current: dict, baseline: dict) -> list[str]:
+    """Human-readable mismatches between two baseline objects."""
+    cur = current["counters"]
+    base = baseline["counters"]
+    out = []
+    for k in sorted(set(base) | set(cur)):
+        if k not in cur:
+            out.append(f"missing: {k} (baseline {base[k]}, current absent)")
+        elif k not in base:
+            out.append(f"new: {k} = {cur[k]} (absent from baseline)")
+        elif cur[k] != base[k]:
+            out.append(f"changed: {k} baseline {base[k]} -> "
+                       f"current {cur[k]}")
+    return out
+
+
+def load_baseline(path: str = BASELINE_PATH) -> dict:
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def write_baseline(obj: dict, path: str = BASELINE_PATH) -> str:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(obj, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def run_gate(*, update: bool = False, path: str = BASELINE_PATH,
+             tracer=None) -> tuple[int, list[str]]:
+    """Collect and compare (or rewrite) the baseline.
+
+    Returns ``(exit_status, messages)`` — status 0 iff the gate passes
+    (or the baseline was updated).
+    """
+    current = collect(tracer=tracer)
+    if update:
+        write_baseline(current, path)
+        return 0, [f"baseline updated: {os.path.relpath(path, _REPO_ROOT)} "
+                   f"({len(current['counters'])} counters) — commit it"]
+    if not os.path.exists(path):
+        return 1, [f"no baseline at {os.path.relpath(path, _REPO_ROOT)} — "
+                   "run with --update-baseline and commit the artifact"]
+    mismatches = diff(current, load_baseline(path))
+    if mismatches:
+        return 1, [f"FAIL {m}" for m in mismatches] + [
+            "baseline gate failed: counted traffic/dispatch changed. If "
+            "intentional, re-baseline with `python -m repro.obs baseline "
+            "--update-baseline` and commit the diff."]
+    return 0, [f"baseline gate passed: {len(current['counters'])} counted "
+               "metrics match the committed baseline"]

@@ -32,6 +32,8 @@ import numpy as np
 
 from ..kernels.mttkrp import kernel as _kernel
 from ..kernels.mttkrp import ops as _ops
+from ..obs import counters as _obs
+from ..obs import tracer as _tracer_mod
 from . import planner as _planner
 
 __all__ = [
@@ -234,15 +236,21 @@ def mttkrp_out_of_core(
         max_blocks = max(1, max_chunk_bytes // per_block_bytes)
     chunks = chunk_boundaries(tile_of_block, max_blocks)
 
+    tracer = _tracer_mod.get_tracer()
     out = jnp.zeros((rows_cap, rpad), jnp.float32)
-    for start, stop in chunks:
-        sl = slice(start * blk, stop * blk)
-        out = _kernel.fused_mttkrp_nmode_gather_stream(
-            v_al[sl], idx_al[sl], fmats, r_al[sl],
-            tile_of_block[start:stop],
-            tuple(s[start:stop] for s in scheds),
-            rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
-            interpret=interpret, out_init=out)
+    with tracer.span("oocore.mode_step", mode=mode, chunks=len(chunks)):
+        for ci, (start, stop) in enumerate(chunks):
+            sl = slice(start * blk, stop * blk)
+            with tracer.span("oocore.chunk", chunk=ci,
+                             blocks=stop - start):
+                out = _kernel.fused_mttkrp_nmode_gather_stream(
+                    v_al[sl], idx_al[sl], fmats, r_al[sl],
+                    tile_of_block[start:stop],
+                    tuple(s[start:stop] for s in scheds),
+                    rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
+                    interpret=interpret, out_init=out)
+                if tracer.enabled:
+                    out = out.block_until_ready()
 
     slab_cols = min(rpad, _kernel.RANK_SLAB)
     scheduled_b, distinct_b, pipelined_b = _schedule_fetch_stats(
@@ -267,4 +275,7 @@ def mttkrp_out_of_core(
             k, rpad, blk, tile_rows,
             sum(int(f.shape[0]) for f in fmats), gather_itemsize=gi),
     )
+    # The counted struct also lands in the shared obs registry — the
+    # `oocore.*` namespace the span tracer and CI baseline read.
+    _obs.record_stream_stats(stats)
     return out[:, :rank], stats

@@ -44,6 +44,7 @@ import dataclasses
 from typing import Sequence
 
 from ..kernels.mttkrp import kernel as _kernel
+from ..obs import counters as _obs
 
 __all__ = [
     "FACTOR_ROW_TILE",
@@ -278,6 +279,11 @@ def plan_residency(*, nmodes: int, rank: int, blk: int = 512,
     per_mode, total = _normalize_factor_rows(factor_rows, k)
 
     def finish(backend, vmem_bytes, rank_slabs=1, window=(), factors=()):
+        # Static arithmetic (runs at jit-trace time) → counted once per
+        # unique plan query per process: eligible for the obs baseline.
+        _obs.add("planner.plans")
+        _obs.add("planner.vmem.plan_bytes", int(vmem_bytes),
+                 backend=backend)
         return ResidencyPlan(
             backend=backend, vmem_bytes=int(vmem_bytes),
             rank_slabs=rank_slabs, window_tiles=tuple(window),

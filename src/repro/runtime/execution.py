@@ -36,6 +36,8 @@ import contextlib
 import dataclasses
 import logging
 
+from ..obs import counters as _obs
+
 __all__ = [
     "EXECUTION_MODES",
     "Capability",
@@ -160,6 +162,7 @@ def resolve_interpret(override: bool | None = None,
             f"unknown execution_mode {mode!r}: expected one of "
             f"{EXECUTION_MODES}")
     if mode == "interpret":
+        _obs.add("execution.resolve", mode=mode, interpret=True)
         return True
     if mode == "compiled":
         if not CAPABILITY.can_compile:
@@ -168,14 +171,21 @@ def resolve_interpret(override: bool | None = None,
                 f"is unavailable: {CAPABILITY.reason}. Use "
                 "execution_mode='interpret' (or 'auto', which falls back "
                 "with this reason) on this host.")
+        _obs.add("execution.resolve", mode=mode, interpret=False)
         return False
     # auto
     if CAPABILITY.can_compile:
+        _obs.add("execution.resolve", mode=mode, interpret=False)
         return False
     if not _fallback_logged:
+        # Strictly once per process, and as an obs event first: the
+        # counted `execution.fallback` record survives into traces and
+        # reports even when nobody configured logging.
+        _obs.add("execution.fallback", platform=CAPABILITY.platform)
         _LOG.info("execution_mode='auto' resolves to interpret: %s",
                   CAPABILITY.reason)
         _fallback_logged = True
+    _obs.add("execution.resolve", mode=mode, interpret=True)
     return True
 
 

@@ -37,6 +37,8 @@ import numpy as np
 
 from ..core.tensors import _powerlaw_columns
 from ..kernels.mttkrp import ops as kops
+from ..obs import counters as _obs
+from ..obs import tracer as _tracer_mod
 from .table import CalibrationEntry, CalibrationTable, host_meta
 
 __all__ = [
@@ -237,19 +239,43 @@ def calibrate(
     points = list(grid) if grid is not None else default_grid(quick=quick)
     if measure is None:
         measure = _real_measure(seed=seed, warmup=warmup, iters=iters)
+    tracer = _tracer_mod.get_tracer()
     entries = []
-    for point in points:
-        timings = {b: float(measure(b, point)) for b in backends}
-        entries.append(CalibrationEntry(
-            nmodes=point.nmodes, rank=point.rank, blk=point.blk,
-            tile_rows=point.tile_rows, density=point.density,
-            timings_s=timings, factor_rows=case_factor_rows(point),
-            stream_window_tiles=case_stream_window_tiles(point),
-        ))
-        if verbose:
-            best = entries[-1].best
-            print(f"  {point}: best={best} "
-                  + " ".join(f"{b}={t:.4f}s" for b, t in timings.items()),
-                  flush=True)
-    meta = host_meta(dict(meta_extra or {}, quick=quick, seed=seed))
+    measured_s: dict[str, float] = {}
+    with tracer.span("calibrate", points=len(points),
+                     backends=len(backends)):
+        for point in points:
+            timings = {}
+            with tracer.span("point", nmodes=point.nmodes, rank=point.rank,
+                             blk=point.blk, tile_rows=point.tile_rows,
+                             density=point.density):
+                for b in backends:
+                    with tracer.span("measure", backend=b):
+                        timings[b] = float(measure(b, point))
+                    _obs.add("tune.measure_s", timings[b], backend=b)
+                    measured_s[b] = measured_s.get(b, 0.0) + timings[b]
+                _obs.add("tune.points")
+            entries.append(CalibrationEntry(
+                nmodes=point.nmodes, rank=point.rank, blk=point.blk,
+                tile_rows=point.tile_rows, density=point.density,
+                timings_s=timings, factor_rows=case_factor_rows(point),
+                stream_window_tiles=case_stream_window_tiles(point),
+            ))
+            if verbose:
+                best = entries[-1].best
+                print(f"  {point}: best={best} "
+                      + " ".join(f"{b}={t:.4f}s"
+                                 for b, t in timings.items()),
+                      flush=True)
+    # The table carries its own observability summary: how much wall
+    # time the calibration spent per backend and how many spans the
+    # tracer recorded. A committed table thereby documents its
+    # measurement cost, not just its argmins.
+    obs_meta = {
+        "points": len(points),
+        "measure_s": {b: round(s, 6) for b, s in sorted(measured_s.items())},
+        "spans": len(tracer.records) if tracer.enabled else 0,
+    }
+    meta = host_meta(dict(meta_extra or {}, quick=quick, seed=seed,
+                          obs=obs_meta))
     return CalibrationTable(entries=entries, meta=meta)

@@ -24,6 +24,13 @@ nothing but a Python interpreter):
    (no kernel to lower) must carry an em-dash. So the docs claim
    exactly what the checked-in sweep demonstrated.
 
+4. **docs/observability.md counter table ↔ obs NAMESPACES sync.** The
+   rows between the ``<!-- COUNTERS:BEGIN/END -->`` markers must list
+   exactly the names of ``repro.obs.counters.NAMESPACES`` (read with
+   ``ast``, like BACKENDS). The registry rejects undocumented names at
+   runtime; this closes the loop the other way — a namespace entry
+   without a doc row fails CI.
+
 Exit status 0 iff all checks pass; failures are printed one per line.
 """
 from __future__ import annotations
@@ -41,6 +48,9 @@ KERNELS_DOC = os.path.join(REPO_ROOT, "docs", "kernels.md")
 LOWERING_BENCH = os.path.join(REPO_ROOT, "experiments", "bench",
                               "BENCH_lowering.json")
 LOWERING_COLUMN = "lowers (Mosaic)"
+COUNTERS_PATH = os.path.join(REPO_ROOT, "src", "repro", "obs",
+                             "counters.py")
+OBS_DOC = os.path.join(REPO_ROOT, "docs", "observability.md")
 
 # Names the matrix documents beyond ops.BACKENDS: the auto resolver and
 # the distributed layer's plain-XLA path.
@@ -50,6 +60,8 @@ _SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", ".claude",
               "node_modules", ".venv"}
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _ROW_NAME_RE = re.compile(r"^\|\s*`([a-z0-9_]+)`")
+# Counter names are dotted (`oocore.dma.scheduled_bytes`).
+_COUNTER_ROW_RE = re.compile(r"^\|\s*`([a-z0-9_.]+)`")
 
 
 def iter_markdown_files():
@@ -190,6 +202,56 @@ def check_lowering_sync() -> list[str]:
     return errors
 
 
+def obs_namespaces() -> tuple[str, ...]:
+    """`NAMESPACES` from obs/counters.py via ast — no jax import."""
+    with open(COUNTERS_PATH, encoding="utf-8") as f:
+        tree = ast.parse(f.read(), filename=COUNTERS_PATH)
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "NAMESPACES"
+                for t in node.targets):
+            return tuple(ast.literal_eval(node.value))
+    raise AssertionError(f"no literal NAMESPACES assignment found in "
+                         f"{COUNTERS_PATH}")
+
+
+def documented_counters() -> set[str]:
+    """Counter names in observability.md's marked table rows."""
+    with open(OBS_DOC, encoding="utf-8") as f:
+        text = f.read()
+    try:
+        block = text.split("<!-- COUNTERS:BEGIN -->", 1)[1] \
+                    .split("<!-- COUNTERS:END -->", 1)[0]
+    except IndexError:
+        raise AssertionError(
+            "docs/observability.md is missing the "
+            "<!-- COUNTERS:BEGIN/END --> markers around the counter "
+            "namespace table")
+    names = set()
+    for line in block.splitlines():
+        m = _COUNTER_ROW_RE.match(line.strip())
+        if m:
+            names.add(m.group(1))
+    return names
+
+
+def check_counter_sync() -> list[str]:
+    errors = []
+    code = set(obs_namespaces())
+    docs = documented_counters()
+    for missing in sorted(code - docs):
+        errors.append(
+            f"docs/observability.md: counter `{missing}` is in "
+            "obs.counters.NAMESPACES but missing from the namespace "
+            "table")
+    for stale in sorted(docs - code):
+        errors.append(
+            f"docs/observability.md: counter `{stale}` is documented "
+            "but not in obs.counters.NAMESPACES — remove the row or "
+            "register the name")
+    return errors
+
+
 def check_backend_sync() -> list[str]:
     errors = []
     code = set(ops_backends())
@@ -211,15 +273,18 @@ def main() -> int:
     link_errors, checked = check_links()
     sync_errors = check_backend_sync()
     lowering_errors = check_lowering_sync()
-    for e in link_errors + sync_errors + lowering_errors:
+    counter_errors = check_counter_sync()
+    for e in link_errors + sync_errors + lowering_errors + counter_errors:
         print(f"FAIL {e}")
-    if link_errors or sync_errors or lowering_errors:
+    if link_errors or sync_errors or lowering_errors or counter_errors:
         return 1
     n_backends = len(ops_backends())
     n_lower = sum(lowering_status().values())
     print(f"docs checks passed: {checked} markdown links resolve, "
           f"{n_backends} backends in sync with docs/kernels.md, "
-          f"{n_lower} lowering statuses match BENCH_lowering.json")
+          f"{n_lower} lowering statuses match BENCH_lowering.json, "
+          f"{len(obs_namespaces())} counters in sync with "
+          "docs/observability.md")
     return 0
 
 

@@ -1,0 +1,454 @@
+"""repro.obs — span tracing, counter registry, baseline gate (PR-7).
+
+Coverage per the issue checklist:
+  * tracer/counter invariants: spans nest/close correctly under
+    arbitrary interleavings (hypothesis program sweep), per-span counter
+    deltas, Chrome-trace export validates against the schema checker
+    (and the checker catches corrupt traces);
+  * ``StreamStats → CounterRegistry`` round-trip preserves the counted
+    byte ordering the struct guarantees (``scheduled >= distinct`` and
+    ``scheduled >= pipelined``) — both on synthetic stats and on a real
+    chunked executor run;
+  * the no-op tracer records nothing and adds zero counters;
+  * emitters: ``select_backend`` → ``dispatch.backend{...}``,
+    ``plan_residency`` → ``planner.*``, ``record_remap_exchange``
+    arithmetic;
+  * the baseline gate's diff demonstrably fails on a perturbed counter
+    and on a changed dispatch decision, and its counted filter excludes
+    host-dependent (``execution.*``, ``*_s``) metrics.
+"""
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.obs import baseline as obaseline
+from repro.obs import counters as ocnt
+from repro.obs import tracer as otr
+
+
+# ---------------------------------------------------------------------------
+# CounterRegistry
+# ---------------------------------------------------------------------------
+
+def test_counter_key_round_trip():
+    key = ocnt.counter_key("dispatch.backend",
+                           {"source": "static", "backend": "ref"})
+    assert key == "dispatch.backend{backend=ref,source=static}"
+    name, labels = ocnt.split_key(key)
+    assert name == "dispatch.backend"
+    assert labels == {"backend": "ref", "source": "static"}
+    assert ocnt.split_key("planner.plans") == ("planner.plans", {})
+
+
+def test_registry_add_get_total_reset():
+    reg = ocnt.CounterRegistry()
+    reg.add("oocore.chunks", 3)
+    reg.add("oocore.chunks", 2)
+    reg.add("oocore.dma.scheduled_bytes", 100)
+    assert reg.get("oocore.chunks") == 5
+    assert reg.total("oocore.") == 105
+    assert reg.total("oocore.dma.") == 100
+    snap = reg.snapshot()
+    assert snap == {"oocore.chunks": 5, "oocore.dma.scheduled_bytes": 100}
+    reg.reset()
+    assert len(reg) == 0
+    snap["oocore.chunks"] = 99      # snapshot is a copy
+    assert reg.get("oocore.chunks") == 0
+
+
+def test_registry_rejects_undocumented_names():
+    reg = ocnt.CounterRegistry()
+    with pytest.raises(ValueError, match="NAMESPACES"):
+        reg.add("oocore.dma.typo_bytes", 1)
+
+
+def test_namespaces_sorted_literal():
+    assert list(ocnt.NAMESPACES) == sorted(ocnt.NAMESPACES)
+    assert len(set(ocnt.NAMESPACES)) == len(ocnt.NAMESPACES)
+
+
+def test_use_registry_scopes_and_restores():
+    before = ocnt.get_registry()
+    with ocnt.use_registry() as reg:
+        assert ocnt.get_registry() is reg
+        ocnt.add("planner.plans")
+        assert reg.get("planner.plans") == 1
+    assert ocnt.get_registry() is before
+    assert before.get("planner.plans", 0) != 1 or before is not reg
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+
+def test_spans_nest_and_record():
+    tracer = otr.Tracer()
+    with tracer.span("sweep", sweep=0):
+        with tracer.span("mode", mode=2):
+            with tracer.span("mttkrp"):
+                pass
+        with tracer.span("mode", mode=3):
+            pass
+    assert tracer.open_spans == 0
+    names = [r.name for r in tracer.records]       # closed-order
+    assert names == ["mttkrp", "mode", "mode", "sweep"]
+    by_sid = {r.sid: r for r in tracer.records}
+    sweep = next(r for r in tracer.records if r.name == "sweep")
+    assert sweep.parent == -1 and sweep.depth == 0
+    for r in tracer.records:
+        if r.name == "mode":
+            assert by_sid[r.parent].name == "sweep" and r.depth == 1
+        if r.name == "mttkrp":
+            assert by_sid[r.parent].name == "mode" and r.depth == 2
+        assert r.t1 >= r.t0
+
+
+def test_span_closes_on_exception():
+    tracer = otr.Tracer()
+    with pytest.raises(RuntimeError, match="boom"):
+        with tracer.span("outer"):
+            with tracer.span("inner"):
+                raise RuntimeError("boom")
+    assert tracer.open_spans == 0
+    assert [r.name for r in tracer.records] == ["inner", "outer"]
+
+
+def test_span_counter_deltas():
+    with ocnt.use_registry():
+        tracer = otr.Tracer()
+        with tracer.span("outer"):
+            ocnt.add("planner.plans")
+            with tracer.span("inner"):
+                ocnt.add("oocore.chunks", 4)
+        inner, outer = tracer.records
+        assert inner.counters == {"oocore.chunks": 4}
+        assert outer.counters == {"planner.plans": 1, "oocore.chunks": 4}
+
+
+def test_export_with_open_span_raises():
+    tracer = otr.Tracer()
+    cm = tracer.span("dangling")
+    cm.__enter__()
+    with pytest.raises(RuntimeError, match="open span"):
+        tracer.chrome_trace()
+    with pytest.raises(RuntimeError, match="open span"):
+        tracer.reset()
+    cm.__exit__(None, None, None)
+    tracer.chrome_trace()   # fine now
+
+
+def test_exit_without_enter_raises():
+    tracer = otr.Tracer()
+    with pytest.raises(RuntimeError, match="no open span"):
+        tracer._exit()
+
+
+def test_chrome_trace_schema_and_roundtrip(tmp_path):
+    tracer = otr.Tracer()
+    with tracer.span("sweep", sweep=0):
+        with tracer.span("mode", mode=1):
+            pass
+    path = tracer.write_chrome_trace(str(tmp_path / "t.json"),
+                                     meta={"k": "v"})
+    with open(path) as f:
+        trace = json.load(f)
+    assert otr.validate_chrome_trace(
+        trace, expect_names=["sweep", "mode"]) == []
+    assert trace["otherData"]["k"] == "v"
+    ev = {e["name"]: e for e in trace["traceEvents"]}
+    assert ev["mode"]["args"]["mode"] == 1
+    # child is contained in parent
+    assert ev["mode"]["ts"] >= ev["sweep"]["ts"]
+    assert (ev["mode"]["ts"] + ev["mode"]["dur"]
+            <= ev["sweep"]["ts"] + ev["sweep"]["dur"] + 1e-3)
+
+
+def test_validator_rejects_bad_traces():
+    assert otr.validate_chrome_trace([]) != []
+    assert otr.validate_chrome_trace({"traceEvents": [{}]}) != []
+    bad_ph = {"traceEvents": [dict(name="a", cat="c", ph="B", ts=0, dur=1,
+                                   pid=1, tid=0, args={})]}
+    assert any("ph" in e for e in otr.validate_chrome_trace(bad_ph))
+    # overlapping (non-nested) events on one timeline
+    overlap = {"traceEvents": [
+        dict(name="a", cat="c", ph="X", ts=0.0, dur=10.0, pid=1, tid=0,
+             args={}),
+        dict(name="b", cat="c", ph="X", ts=5.0, dur=10.0, pid=1, tid=0,
+             args={}),
+    ]}
+    assert any("overlaps" in e for e in otr.validate_chrome_trace(overlap))
+    missing = {"traceEvents": []}
+    assert any("sweep" in e for e in otr.validate_chrome_trace(
+        missing, expect_names=["sweep"]))
+
+
+def test_render_tree():
+    with ocnt.use_registry():
+        tracer = otr.Tracer()
+        with tracer.span("sweep", sweep=0):
+            with tracer.span("mode", mode=1):
+                ocnt.add("planner.plans")
+        text = tracer.render()
+    lines = text.splitlines()
+    assert lines[0].startswith("sweep")
+    assert any(l.strip().startswith("mode") for l in lines)
+    assert any("planner.plans" in l for l in lines)
+
+
+def test_use_tracer_scopes_process_default():
+    assert otr.get_tracer() is otr.NULL
+    with otr.use_tracer() as tracer:
+        assert otr.get_tracer() is tracer
+        assert tracer.enabled
+    assert otr.get_tracer() is otr.NULL
+    otr.set_tracer(None)
+    assert otr.get_tracer() is otr.NULL
+
+
+def test_null_tracer_is_inert():
+    with ocnt.use_registry() as reg:
+        null = otr.NULL
+        assert not null.enabled
+        with null.span("sweep", sweep=0):
+            with null.span("mode"):
+                pass
+        assert null.records == ()
+        assert null.open_spans == 0
+        assert len(reg) == 0        # zero counters from the no-op path
+        null.reset()
+
+
+# hypothesis: arbitrary well-formed push/pop interleavings keep the
+# recorded forest consistent (parents, depths, containment) and export
+# a schema-valid Chrome trace.
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=0, max_size=40))
+def test_span_nesting_under_arbitrary_interleavings(program):
+    tracer = otr.Tracer(attach_counters=False)
+    stack = []
+    sid_depth = {}
+    for op in program:
+        if op == 0 and len(stack) < 6:          # push
+            cm = tracer.span(f"s{len(tracer.records)}_{len(stack)}")
+            cm.__enter__()
+            stack.append(cm)
+        elif stack:                              # pop
+            stack.pop().__exit__(None, None, None)
+    while stack:
+        stack.pop().__exit__(None, None, None)
+    assert tracer.open_spans == 0
+    by_sid = {r.sid: r for r in tracer.records}
+    for r in tracer.records:
+        if r.parent == -1:
+            assert r.depth == 0
+        else:
+            p = by_sid[r.parent]
+            assert r.depth == p.depth + 1
+            assert p.t0 <= r.t0 and r.t1 <= p.t1       # containment
+    assert otr.validate_chrome_trace(tracer.chrome_trace()) == []
+
+
+# ---------------------------------------------------------------------------
+# Absorbers: StreamStats / remap exchange
+# ---------------------------------------------------------------------------
+
+class _FakeStats:
+    """Duck-typed StreamStats (record_stream_stats never imports oocore)."""
+
+    def __init__(self, s, d, p, i, backend="pallas_fused_gather_stream",
+                 chunks=3):
+        self.backend, self.chunks = backend, chunks
+        self.scheduled_tile_bytes = s
+        self.distinct_tile_bytes = d
+        self.pipelined_tile_bytes = p
+        self.index_stream_bytes = i
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    scheduled=st.integers(0, 10**12),
+    d_frac=st.floats(0.0, 1.0),
+    p_frac=st.floats(0.0, 1.0),
+    index=st.integers(0, 10**9),
+)
+def test_stream_stats_round_trip_preserves_ordering(scheduled, d_frac,
+                                                    p_frac, index):
+    # StreamStats' contract: distinct <= scheduled and
+    # pipelined <= scheduled (pipelined may exceed distinct — chunk
+    # boundaries re-fetch tiles the schedule only references once).
+    distinct = int(scheduled * d_frac)
+    pipelined = int(scheduled * p_frac)
+    reg = ocnt.CounterRegistry()
+    ocnt.record_stream_stats(
+        _FakeStats(scheduled, distinct, pipelined, index), registry=reg)
+    s = reg.get("oocore.dma.scheduled_bytes")
+    d = reg.get("oocore.dma.distinct_bytes")
+    p = reg.get("oocore.dma.pipelined_bytes")
+    assert (s, d, p) == (scheduled, distinct, pipelined)
+    assert d <= s and p <= s
+    assert reg.get("oocore.dma.index_stream_bytes") == index
+    assert reg.get("oocore.chunks") == 3
+    assert reg.get("oocore.mode_steps",
+                   backend="pallas_fused_gather_stream") == 1
+
+
+def test_executor_emits_stream_stats():
+    import jax.numpy as jnp
+
+    from repro.core.tensors import random_sparse_tensor
+    from repro.oocore.executor import mttkrp_out_of_core
+
+    shape, mode, rank = (20, 300, 170), 0, 32
+    rng = np.random.default_rng(0)
+    t = random_sparse_tensor(shape, 200, seed=0)
+    order = np.argsort(t.indices[:, mode], kind="stable")
+    idx = t.indices[order].astype(np.int32)
+    val = t.values[order].astype(np.float32)
+    valid = np.ones(len(val), bool)
+    factors = [jnp.asarray(rng.standard_normal((d, rank)), jnp.float32)
+               for d in shape]
+    with ocnt.use_registry() as reg:
+        _, stats = mttkrp_out_of_core(
+            idx, val, valid, factors, mode=mode, rows_cap=24, blk=8,
+            tile_rows=8, max_chunk_bytes=1200)
+    assert stats.chunks >= 2
+    assert reg.get("oocore.chunks") == stats.chunks
+    assert reg.get("oocore.dma.scheduled_bytes") \
+        == stats.scheduled_tile_bytes
+    assert reg.get("oocore.dma.distinct_bytes") == stats.distinct_tile_bytes
+    assert reg.get("oocore.dma.pipelined_bytes") \
+        == stats.pipelined_tile_bytes
+    assert stats.distinct_tile_bytes <= stats.scheduled_tile_bytes
+    assert stats.pipelined_tile_bytes <= stats.scheduled_tile_bytes
+
+
+def test_record_remap_exchange_arithmetic():
+    reg = ocnt.CounterRegistry()
+    caps, D, nmodes = [10, 7, 12], 4, 3
+    ocnt.record_remap_exchange(caps, D, nmodes, registry=reg)
+    per_pair = D * D * (4 * nmodes + 4)
+    for n, cap in enumerate(caps):
+        assert reg.get("remap.a2a.bytes", transition=n) == cap * per_pair
+    assert reg.get("remap.a2a.uniform_bytes") \
+        == len(caps) * max(caps) * per_pair
+    assert reg.get("remap.transitions") == len(caps)
+    # per-transition sizing never exceeds the uniform-cap allocation
+    total = sum(reg.get("remap.a2a.bytes", transition=n)
+                for n in range(len(caps)))
+    assert total <= reg.get("remap.a2a.uniform_bytes")
+    # uniform_cap=True sizes every transition to the max
+    reg2 = ocnt.CounterRegistry()
+    ocnt.record_remap_exchange(caps, D, nmodes, uniform_cap=True,
+                               registry=reg2)
+    for n in range(len(caps)):
+        assert reg2.get("remap.a2a.bytes", transition=n) \
+            == max(caps) * per_pair
+
+
+# ---------------------------------------------------------------------------
+# Emitters in the dispatch/planner layer
+# ---------------------------------------------------------------------------
+
+def test_select_backend_emits_dispatch_decisions():
+    from repro.kernels.mttkrp import ops as kops
+
+    with ocnt.use_registry() as reg:
+        out = kops.select_backend("pallas_fused", nmodes=3, rank=128)
+        assert out == "pallas_fused"
+        assert reg.get("dispatch.backend", backend="pallas_fused",
+                       source="explicit") == 1
+        chosen = kops.select_backend("auto", nmodes=3, rank=128,
+                                     factor_rows=(64, 64))
+        assert reg.get("dispatch.backend", backend=chosen,
+                       source="static") == 1
+        # the static path went through the planner
+        assert reg.get("planner.plans") >= 1
+        assert reg.get("planner.vmem.plan_bytes", backend=chosen) > 0
+
+
+def test_plan_residency_emits_planner_counters():
+    from repro.oocore import planner
+
+    with ocnt.use_registry() as reg:
+        plan = planner.plan_residency(nmodes=3, rank=128,
+                                      factor_rows=(64, 64))
+        assert reg.get("planner.plans") == 1
+        assert reg.get("planner.vmem.plan_bytes", backend=plan.backend) \
+            == plan.vmem_bytes
+
+
+# ---------------------------------------------------------------------------
+# Baseline gate
+# ---------------------------------------------------------------------------
+
+def test_counted_filter_excludes_host_dependent():
+    assert obaseline._is_counted("oocore.dma.scheduled_bytes")
+    assert obaseline._is_counted(
+        "dispatch.backend{backend=ref,source=static}")
+    assert obaseline._is_counted("remap.a2a.bytes{transition=0}")
+    assert not obaseline._is_counted("execution.fallback{platform=cpu}")
+    assert not obaseline._is_counted("execution.resolve{mode=auto}")
+    assert not obaseline._is_counted("tune.measure_s{backend=ref}")
+    assert not obaseline._is_counted("serve.tokens")
+    assert not obaseline._is_counted("dryrun.lower_s{arch=x}")
+
+
+def test_baseline_diff_catches_perturbations():
+    base = {"counters": {
+        "dispatch.backend{backend=pallas_fused_gather,source=static}": 4,
+        "oocore.dma.scheduled_bytes": 42205184,
+    }}
+    assert obaseline.diff(base, base) == []
+    # a counted DMA byte count perturbed
+    cur = json.loads(json.dumps(base))
+    cur["counters"]["oocore.dma.scheduled_bytes"] += 1
+    msgs = obaseline.diff(cur, base)
+    assert len(msgs) == 1 and "oocore.dma.scheduled_bytes" in msgs[0]
+    # a dispatch decision changed backend → old key missing + new key
+    cur2 = {"counters": {
+        "dispatch.backend{backend=pallas_fused,source=static}": 4,
+        "oocore.dma.scheduled_bytes": 42205184,
+    }}
+    msgs2 = obaseline.diff(cur2, base)
+    assert any(m.startswith("missing:") for m in msgs2)
+    assert any(m.startswith("new:") for m in msgs2)
+
+
+def test_baseline_artifact_is_committed_and_sane():
+    base = obaseline.load_baseline()
+    assert base["meta"]["schema"] == 1
+    counters = base["counters"]
+    assert counters, "committed baseline has no counters"
+    for key, v in counters.items():
+        assert obaseline._is_counted(key), f"host-dependent key {key}"
+        assert isinstance(v, int) and v >= 0
+    # the instrumented workload exercised every gated subsystem
+    names = {ocnt.split_key(k)[0] for k in counters}
+    for want in ("cpals.sweeps", "dispatch.backend", "planner.plans",
+                 "oocore.dma.scheduled_bytes", "remap.a2a.bytes"):
+        assert want in names, f"baseline missing {want}"
+
+
+def test_run_gate_reports_failure_on_perturbed_baseline(tmp_path,
+                                                        monkeypatch):
+    # run_gate with a synthetic collect(): no jax run needed to prove
+    # the gate's pass/fail/update mechanics.
+    current = {"meta": {"schema": 1},
+               "counters": {"planner.plans": 4, "oocore.chunks": 12}}
+    monkeypatch.setattr(obaseline, "collect", lambda tracer=None: current)
+    path = str(tmp_path / "BASELINE_counters.json")
+    status, msgs = obaseline.run_gate(path=path)
+    assert status == 1 and any("no baseline" in m for m in msgs)
+    status, msgs = obaseline.run_gate(path=path, update=True)
+    assert status == 0
+    status, msgs = obaseline.run_gate(path=path)
+    assert status == 0
+    perturbed = {"meta": {"schema": 1},
+                 "counters": {"planner.plans": 5, "oocore.chunks": 12}}
+    monkeypatch.setattr(obaseline, "collect",
+                        lambda tracer=None: perturbed)
+    status, msgs = obaseline.run_gate(path=path)
+    assert status == 1
+    assert any("planner.plans" in m for m in msgs)
