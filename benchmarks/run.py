@@ -20,8 +20,8 @@ import time
 from . import (bench_bf16_convergence, bench_collective_traffic,
                bench_dispatch, bench_lowering, bench_memory, bench_oocore,
                bench_preprocess, bench_rank, bench_remap_fusion,
-               bench_remap_traffic, bench_scaling, bench_schedule,
-               bench_total_time, roofline)
+               bench_remap_traffic, bench_reorder, bench_scaling,
+               bench_schedule, bench_total_time, roofline)
 from . import common
 from .common import print_rows, write_bench_json
 
@@ -39,6 +39,7 @@ SUITES = {
     "dispatch": bench_dispatch.run,              # repro.tune calibrated auto
     "bf16_convergence": bench_bf16_convergence.run,   # bf16 gathers, fit gap
     "oocore": bench_oocore.run,                  # out-of-core streamed gather
+    "reorder": bench_reorder.run,                # locality-ordered streams
     "lowering": bench_lowering.run,              # interpret=False Mosaic status
 }
 

@@ -45,7 +45,7 @@ def load(dirname):
 # committing; every other suite's rows carry wall-clock timings that
 # only mean something on the host that measured them.
 COUNTED_SUITES = {"BENCH_lowering.json", "BENCH_oocore.json",
-                  "BENCH_dispatch.json"}
+                  "BENCH_dispatch.json", "BENCH_reorder.json"}
 
 
 def bench_inventory(bench_dir="experiments/bench"):

@@ -307,6 +307,7 @@ def cp_als_distributed(ft: FlycooTensor, rank: int, mesh: Mesh, *,
                        backend: str = "segsum",
                        tile_rows: int = 8, table=None,
                        gather_dtype: str = "float32",
+                       ordering: str | None = None,
                        tracer=None) -> CPResult:
     """Distributed CP-ALS: FLYCOO layout + Dynasor sweeps on ``mesh``.
 
@@ -320,6 +321,11 @@ def cp_als_distributed(ft: FlycooTensor, rank: int, mesh: Mesh, *,
     accumulate); the end-to-end fit impact is measured by
     ``benchmarks/bench_bf16_convergence.py``.
 
+    ``ordering`` (:data:`repro.reorder.ORDERINGS`; ``None`` inherits
+    ``ft.ordering``) turns on locality-aware nonzero ordering for every
+    fused-family mode step — same fit up to fp32 accumulation order
+    (property-tested in ``tests/test_reorder.py``).
+
     ``tracer`` defaults to the process tracer (``repro.obs``), normally
     the no-op — the production path below stays untouched. An *enabled*
     tracer switches to the stepped driver
@@ -331,7 +337,8 @@ def cp_als_distributed(ft: FlycooTensor, rank: int, mesh: Mesh, *,
     rt, (idx, val, mask) = dist.prepare_runtime(ft, rank,
                                                 tile_rows=tile_rows,
                                                 table=table,
-                                                gather_dtype=gather_dtype)
+                                                gather_dtype=gather_dtype,
+                                                ordering=ordering)
     if tracer.enabled:
         return _cp_als_distributed_traced(
             ft, rank, mesh, rt, idx, val, mask, iters=iters, seed=seed,

@@ -79,6 +79,11 @@ class ModePlan(NamedTuple):
     # is pallas_fused_gather_stream, else (). Metadata like rank_slabs:
     # the kernel derives its real windows from the factor shapes.
     window_tiles: tuple = ()
+    # repro.reorder.ORDERINGS locality policy the mode step applies
+    # in-jit (build_block_layout order_keys). Unlike rank_slabs /
+    # window_tiles this is *not* metadata — it changes the aligned
+    # stream the kernel sees.
+    ordering: str = "none"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +113,9 @@ class DynasorRuntime:
     # accumulates at fp32 (≈(N−1)·2⁻⁸ rel. error); it is threaded here — never
     # chosen by ``auto`` — so the whole decomposition opts in explicitly.
     gather_dtype: str = "float32"
+    # repro.reorder.ORDERINGS locality policy threaded to every mode
+    # step (untuned runtimes; tuned runtimes carry it per ModePlan).
+    ordering: str = "none"
 
     def __post_init__(self):
         # Validate at construction: non-fused mode steps never read this,
@@ -117,6 +125,8 @@ class DynasorRuntime:
             raise ValueError(
                 f"unknown gather_dtype {self.gather_dtype!r}: expected "
                 "'float32' or 'bfloat16'")
+        from ..reorder import validate_ordering  # deferred: reorder→kernels
+        validate_ordering(self.ordering)
 
     @property
     def payload_width(self) -> int:
@@ -147,7 +157,8 @@ class DynasorRuntime:
             if backend != "auto":
                 p = p._replace(backend=backend)
         else:
-            p = ModePlan(backend, self.blk, self.tile_rows)
+            p = ModePlan(backend, self.blk, self.tile_rows,
+                         ordering=self.ordering)
         slabs = 1
         if p.backend in ("pallas_fused_tiled", "pallas_fused_gather_tiled",
                          kops.STREAM_BACKEND):
@@ -163,7 +174,7 @@ class DynasorRuntime:
 def prepare_runtime(
     ft: FlycooTensor, rank: int, *, blk: int | None = None,
     tile_rows: int = 8, uniform_cap: bool = False, table=None,
-    gather_dtype: str = "float32",
+    gather_dtype: str = "float32", ordering: str | None = None,
 ) -> tuple[DynasorRuntime, tuple[np.ndarray, np.ndarray, np.ndarray]]:
     """Build runtime metadata + the initial mode-0 packed layout (H_0).
 
@@ -177,12 +188,18 @@ def prepare_runtime(
         callers follow it. ``None`` keeps the static configuration.
       gather_dtype: ``"float32"`` (default) or ``"bfloat16"`` — threaded
         to every fused-kernel mode step (see ``DynasorRuntime``).
+      ordering: :data:`repro.reorder.ORDERINGS` locality policy threaded
+        to every mode step (in-jit re-ranking — the order survives the
+        dynamic remapping between modes). ``None`` (default) inherits
+        ``ft.ordering``, so a tensor built with
+        ``build_flycoo(..., ordering=...)`` keeps its policy end to end.
     """
+    ordering = ft.ordering if ordering is None else ordering
     D = ft.params.num_workers
     plans = None
     if table is not None:
         from ..tune.model import plan_modes  # deferred: tune imports core
-        plans = plan_modes(table, ft, rank)
+        plans = plan_modes(table, ft, rank, ordering=ordering)
     tiles = (
         tuple(p.tile_rows for p in plans) if plans is not None
         else (tile_rows,) * ft.nmodes
@@ -205,7 +222,7 @@ def prepare_runtime(
         bucket_cap=max(caps), shape=ft.tensor.shape,
         blk=blk, tile_rows=tile_rows,
         bucket_caps=None if uniform_cap else tuple(caps),
-        mode_plans=plans, gather_dtype=gather_dtype,
+        mode_plans=plans, gather_dtype=gather_dtype, ordering=ordering,
     )
     # pack_mode used flycoo rows_cap; re-pad indices to tile-rounded layout.
     idx, val, mask = pack_mode(ft, 0)
@@ -294,7 +311,7 @@ def device_mttkrp(idx, val, mask, factors, mode: int, rt: DynasorRuntime,
             idx, val, mask, factors, mode=mode, rows_cap=rows_cap,
             row_offset=dev * rows_cap, blk=plan.blk,
             tile_rows=plan.tile_rows, backend=backend,
-            gather_dtype=rt.gather_dtype,
+            gather_dtype=rt.gather_dtype, ordering=plan.ordering,
         )
     # segsum: plain XLA segment-sum path (dry-run / TPU-lowerable default).
     local_row = jnp.where(mask, idx[:, mode] - dev * rows_cap, 0)

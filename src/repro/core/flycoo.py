@@ -90,6 +90,10 @@ class FlycooTensor:
     params: PartitionParams
     modes: list[ModePartition]
     perm_indices: np.ndarray     # (nnz, N) indices mapped through row_perm per mode
+    # repro.reorder.ORDERINGS policy pack_mode applies within equal
+    # (owner, output-row) groups — factor-tile locality for the gathered
+    # modes without disturbing the row sort the segsum path needs.
+    ordering: str = "none"
 
     @property
     def nnz(self) -> int:
@@ -255,12 +259,20 @@ def build_flycoo(
     m_bounds: tuple[int, int] = (1000, 16000),
     g_bounds: tuple[int, int] = (1024, 32768),
     fused_gather: bool = False,
+    ordering: str = "none",
 ) -> FlycooTensor:
     """Preprocess ``t`` into FLYCOO format (paper §V-J stages 1–3).
 
     ``fused_gather=True`` sizes shards for the N-mode fused kernel's
     gather-operand working set (see :func:`choose_partition_params`).
+
+    ``ordering`` (:data:`repro.reorder.ORDERINGS`) selects the
+    locality-aware nonzero ordering :func:`pack_mode` applies within
+    each (owner, output row) group — paid once here at preprocessing
+    time, amortized over every ALS sweep.
     """
+    from ..reorder import validate_ordering  # deferred: reorder imports kernels
+    validate_ordering(ordering)
     if params is None:
         params = choose_partition_params(
             t.shape, t.nnz, num_workers, rank=rank, cache_bytes=cache_bytes,
@@ -274,7 +286,7 @@ def build_flycoo(
         [modes[n].row_perm[t.indices[:, n]] for n in range(t.nmodes)], axis=1
     ).astype(np.int64)
     return FlycooTensor(tensor=t, params=params, modes=modes,
-                        perm_indices=perm_indices)
+                        perm_indices=perm_indices, ordering=ordering)
 
 
 def pack_mode(
@@ -285,13 +297,29 @@ def pack_mode(
     Returns ``(idx[(D, cap, N)], val[(D, cap)], mask[(D, cap)])`` — the
     initial distributed layout ``H_mode`` of Alg. 2. Padding entries have
     ``val = 0`` and point at local row 0 (they contribute exactly zero).
+
+    When ``ft.ordering != "none"`` the sort's primaries stay
+    ``(owner, permuted output row)`` — so the stream remains
+    row-sorted, exactly what the segsum path and
+    ``build_block_layout`` require — but ties within an equal output
+    row are broken by the policy's gathered-mode locality keys instead
+    of original nonzero position.
     """
     D = ft.params.num_workers
     cap = int(cap if cap is not None else ft.nnz_cap)
     owner = ft.owner_of(mode)
-    key = owner.astype(np.int64) * (ft.perm_indices[:, mode].max() + 1) \
-        + ft.perm_indices[:, mode]
-    order = np.argsort(key, kind="stable")
+    if ft.ordering != "none":
+        from ..reorder import locality_lexsort  # deferred: reorder imports kernels
+        in_modes = [w for w in range(ft.nmodes) if w != mode]
+        order = locality_lexsort(
+            ft.perm_indices[:, in_modes], ft.ordering,
+            primaries=(owner.astype(np.int64),
+                       ft.perm_indices[:, mode]),
+        )
+    else:
+        key = owner.astype(np.int64) * (ft.perm_indices[:, mode].max() + 1) \
+            + ft.perm_indices[:, mode]
+        order = np.argsort(key, kind="stable")
 
     idx = np.zeros((D, cap, ft.nmodes), dtype=np.int32)
     val = np.zeros((D, cap), dtype=np.float32)

@@ -40,6 +40,11 @@ from . import kernel as _kernel
 from . import ref as _ref
 from ...obs import counters as _obs
 from ...oocore import planner as _planner
+# Imported as the submodule path (not via the package __init__) so the
+# reorder ↔ kernels import cycle resolves: ordering.py only needs
+# ``kernel`` (already initialized when this module loads), and we only
+# touch _reorder attributes at call time.
+from ...reorder import ordering as _reorder
 
 __all__ = [
     "BACKENDS",
@@ -303,14 +308,26 @@ def n_pad_for(cap: int, rows_cap: int, blk: int, tile_rows: int) -> int:
     jax.jit, static_argnames=("rows_cap", "blk", "tile_rows")
 )
 def build_block_layout(local_row, valid, *, rows_cap: int, blk: int,
-                       tile_rows: int):
+                       tile_rows: int, order_keys=None):
     """Compute block-aligned slots for a sorted nonzero stream.
 
     Args:
       local_row: ``(cap,)`` int32 output row per element, ascending among
-        valid elements; invalid elements trail.
+        valid elements; invalid elements trail. (Strictly: only the
+        output-**tile** runs must be contiguous ascending — the order of
+        elements within a tile run is free, which is the freedom the
+        ``order_keys`` path spends.)
       valid: ``(cap,)`` bool.
       rows_cap: output rows (multiple of ``tile_rows``).
+      order_keys: optional tuple of ``(cap,)`` int arrays (most
+        significant first — ``repro.reorder.locality_keys``). When
+        given, elements are ranked within their output-tile run by
+        these keys instead of by stream position, so the aligned stream
+        comes out locality-ordered *in-jit* — no host-side permutation,
+        and the ordering survives the dynamic remapping between modes
+        (which re-sorts by row every transition). With keys the input
+        need not be sorted at all beyond valid-first: the lexsort
+        groups the tile runs itself.
 
     Returns:
       ``(slot, tile_of_block)`` — ``slot[(cap,)]`` destination of each
@@ -329,9 +346,26 @@ def build_block_layout(local_row, valid, *, rows_cap: int, blk: int,
     padded = ((counts + blk - 1) // blk) * blk
     offsets = jnp.concatenate([jnp.zeros(1, jnp.int32),
                                jnp.cumsum(padded).astype(jnp.int32)])
-    # Elements are sorted by (valid desc, row asc) => per-tile runs contiguous.
-    first_of_tile = jnp.searchsorted(tile_of_elem, tile_of_elem, side="left")
-    rank_in_tile = jnp.arange(cap, dtype=jnp.int32) - first_of_tile.astype(jnp.int32)
+    if order_keys:
+        # Rank within the tile run = position under the (tile, keys,
+        # position) lexsort — the jit twin of the host-side
+        # repro.reorder.locality_lexsort (same keys, same tiebreak, so
+        # the two produce bit-identical aligned streams).
+        pos = jnp.arange(cap, dtype=jnp.int32)
+        keys = tuple(jnp.asarray(kk).astype(jnp.int32) for kk in order_keys)
+        order = jnp.lexsort((pos,) + keys[::-1] + (tile_of_elem,))
+        inv = jnp.zeros(cap, jnp.int32).at[order].set(pos)
+        sorted_tiles = jnp.take(tile_of_elem, order)
+        first_of_tile = jnp.searchsorted(sorted_tiles, tile_of_elem,
+                                         side="left")
+        rank_in_tile = inv - first_of_tile.astype(jnp.int32)
+    else:
+        # Elements sorted by (valid desc, row asc) => per-tile runs
+        # contiguous; rank = distance from the run's first position.
+        first_of_tile = jnp.searchsorted(tile_of_elem, tile_of_elem,
+                                         side="left")
+        rank_in_tile = (jnp.arange(cap, dtype=jnp.int32)
+                        - first_of_tile.astype(jnp.int32))
     slot = jnp.where(
         valid,
         jnp.take(offsets, tile_of_elem, fill_value=0) + rank_in_tile,
@@ -426,13 +460,14 @@ def mttkrp_blocked(contrib, local_row, valid, *, rows_cap: int,
 @functools.partial(
     jax.jit,
     static_argnames=("mode", "rows_cap", "blk", "tile_rows", "interpret",
-                     "backend", "gather_dtype"),
+                     "backend", "gather_dtype", "ordering"),
 )
 def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
                        row_offset, blk: int = 512, tile_rows: int = 128,
                        interpret: bool | None = None,
                        backend: str = "pallas",
-                       gather_dtype: str = "float32"):
+                       gather_dtype: str = "float32",
+                       ordering: str = "none"):
     """Full per-device mode step: gather → Hadamard → blocked scatter.
 
     Args:
@@ -460,6 +495,15 @@ def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
         names are the untiled kernels with this forced on (so a plain
         backend-string API can reach them). The materialized/``ref``
         paths ignore it.
+      ordering: :data:`repro.reorder.ORDERINGS` policy. Anything but
+        ``"none"`` re-ranks nonzeros *within* each output-row-tile run
+        by the gathered modes' factor-tile locality keys (in-jit, via
+        ``build_block_layout``'s ``order_keys`` path) before block
+        alignment, shrinking the stream backend's per-block tile
+        schedules. Applied to the whole fused/gather family (same
+        aligned stream everywhere ⇒ A/B bit-exactness across backends
+        is preserved per ordering); the materialized/``ref`` paths
+        don't block-align gathered indices, so they ignore it.
 
     Returns ``(rows_cap, R)`` float32 local output factor rows.
     """
@@ -469,6 +513,7 @@ def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
         raise ValueError(
             f"unknown gather_dtype {gather_dtype!r}: expected "
             "'float32' or 'bfloat16'")
+    _reorder.validate_ordering(ordering)
     nmodes = idx.shape[1]
     rank = factors[mode].shape[-1]
     in_modes = [w for w in range(nmodes) if w != mode]
@@ -488,8 +533,12 @@ def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
         gdt = jnp.bfloat16 if gather_dtype == "bfloat16" else jnp.float32
         vals = jnp.where(valid, val, 0.0)
         n_pad = n_pad_for(local_row.shape[0], rows_cap, blk, tile_rows)
+        idx_in = jnp.stack([idx[:, w] for w in in_modes], axis=1)
+        idx_in = jnp.where(valid[:, None], idx_in, 0).astype(jnp.int32)
+        order_keys = _reorder.locality_keys(idx_in, ordering)
         slot, tile_of_block = build_block_layout(
-            local_row, valid, rows_cap=rows_cap, blk=blk, tile_rows=tile_rows
+            local_row, valid, rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
+            order_keys=order_keys,
         )
         v_al = _align_to_blocks(vals, slot, n_pad)
         r_al = _align_to_blocks(
@@ -505,8 +554,6 @@ def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
             # the gather dtype is what halves both the VMEM residency
             # and the factor-load traffic for bf16 (same values as the
             # materialized path's cast-then-take).
-            idx_in = jnp.stack([idx[:, w] for w in in_modes], axis=1)
-            idx_in = jnp.where(valid[:, None], idx_in, 0).astype(jnp.int32)
             idx_al = _align_to_blocks(idx_in, slot, n_pad)
             fmats = tuple(pad_rank(factors[w].astype(gdt))
                           for w in in_modes)

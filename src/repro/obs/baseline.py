@@ -12,7 +12,8 @@ until it either fixes the regression or *explicitly* re-baselines with
 file, which makes the change reviewable instead of silent).
 
 What the gate covers (:data:`COUNTED_PREFIXES`): ``cpals.*``,
-``dispatch.*``, ``oocore.*``, ``planner.*``, ``remap.*``. Wall-time
+``dispatch.*``, ``oocore.*``, ``planner.*``, ``remap.*``,
+``reorder.*``. Wall-time
 counters (``*_s`` suffixed) and ``execution.*`` / ``serve.*`` /
 ``dryrun.*`` / ``tune.*`` events are host- or config-dependent and are
 filtered out before comparison.
@@ -54,7 +55,8 @@ BASELINE_PATH = os.path.join(_REPO_ROOT, "experiments", "obs",
 
 # Base-name prefixes whose counters are host-independent (counted, not
 # timed) and therefore eligible for the committed baseline.
-COUNTED_PREFIXES = ("cpals.", "dispatch.", "oocore.", "planner.", "remap.")
+COUNTED_PREFIXES = ("cpals.", "dispatch.", "oocore.", "planner.", "remap.",
+                    "reorder.")
 
 # The pinned workload configuration — recorded in the artifact's meta so
 # a baseline mismatch can be reproduced byte-for-byte.
@@ -64,7 +66,8 @@ WORKLOAD = dict(
     seed=0,
     oocore=dict(shape=(20000, 40, 9000, 30), nnz=600, nnz_seed=3,
                 distribution="powerlaw", blk=32, tile_rows=8, rank=256,
-                mode=1, max_chunk_bytes=2000),
+                mode=1, max_chunk_bytes=2000,
+                orderings=("none", "tile", "morton")),
 )
 
 
@@ -134,12 +137,20 @@ def collect(tracer=None) -> dict:
                               np.float32) for d in oo["shape"]]
         rows_cap = -(-oo["shape"][oo["mode"]] // oo["tile_rows"]) \
             * oo["tile_rows"]
+        # One run per reorder policy: "none" pins the oocore.dma.*
+        # bytes exactly as before the reorder pass existed; "tile" and
+        # "morton" additionally pin the reorder.dma.* presort/postsort
+        # bytes and the reorder.perms count — a silent change to the
+        # permutation keys, the chunk-window tightening, or the
+        # predictor arithmetic lands here as a byte diff.
         with tracer.span("oocore.baseline"):
-            mttkrp_out_of_core(
-                idx, val, valid, factors, mode=oo["mode"],
-                rows_cap=rows_cap, blk=oo["blk"],
-                tile_rows=oo["tile_rows"],
-                max_chunk_bytes=oo["max_chunk_bytes"])
+            for ordering in oo["orderings"]:
+                mttkrp_out_of_core(
+                    idx, val, valid, factors, mode=oo["mode"],
+                    rows_cap=rows_cap, blk=oo["blk"],
+                    tile_rows=oo["tile_rows"],
+                    max_chunk_bytes=oo["max_chunk_bytes"],
+                    ordering=ordering)
         snapshot = reg.snapshot()
 
     counters = {k: int(v) for k, v in snapshot.items() if _is_counted(k)}

@@ -74,6 +74,11 @@ NAMESPACES = (
     "remap.a2a.bytes",
     "remap.a2a.uniform_bytes",
     "remap.transitions",
+    "reorder.dma.postsort_distinct_bytes",
+    "reorder.dma.postsort_scheduled_bytes",
+    "reorder.dma.presort_distinct_bytes",
+    "reorder.dma.presort_scheduled_bytes",
+    "reorder.perms",
     "serve.decode_s",
     "serve.prefill_s",
     "serve.tokens",
@@ -211,6 +216,21 @@ def record_stream_stats(stats, *, registry: CounterRegistry | None = None
     reg.add("oocore.dma.distinct_bytes", stats.distinct_tile_bytes)
     reg.add("oocore.dma.pipelined_bytes", stats.pipelined_tile_bytes)
     reg.add("oocore.dma.index_stream_bytes", stats.index_stream_bytes)
+    # Locality-reordered runs (repro.reorder) additionally record the
+    # before/after tile traffic under the reorder.dma.* names, labeled
+    # with the policy — presort is the counted cost the same stream
+    # would have paid unsorted, postsort duplicates the oocore.dma.*
+    # bytes so one namespace tells the whole before/after story.
+    if getattr(stats, "ordering", "none") != "none":
+        o = stats.ordering
+        reg.add("reorder.dma.presort_scheduled_bytes",
+                stats.presort_scheduled_tile_bytes, ordering=o)
+        reg.add("reorder.dma.presort_distinct_bytes",
+                stats.presort_distinct_tile_bytes, ordering=o)
+        reg.add("reorder.dma.postsort_scheduled_bytes",
+                stats.scheduled_tile_bytes, ordering=o)
+        reg.add("reorder.dma.postsort_distinct_bytes",
+                stats.distinct_tile_bytes, ordering=o)
 
 
 def record_remap_exchange(caps, num_workers: int, nmodes: int, *,

@@ -34,6 +34,7 @@ from ..kernels.mttkrp import kernel as _kernel
 from ..kernels.mttkrp import ops as _ops
 from ..obs import counters as _obs
 from ..obs import tracer as _tracer_mod
+from ..reorder import ordering as _reorder
 from . import planner as _planner
 
 __all__ = [
@@ -73,6 +74,14 @@ class StreamStats:
     index_stream_bytes: int         # vals + rows + K index streams, per slab
     window_vmem_bytes: int          # resident window per grid step
     resident_equiv_vmem_bytes: int  # what whole-factor residency would need
+    # repro.reorder: the locality policy the stream was permuted with
+    # ("none" = as given), and the counted cost the *unsorted* stream
+    # would have paid — predicted by planner.predict_stream_traffic
+    # before the permutation, so before/after is one mode step's worth
+    # of data, not two runs. 0 when ordering is "none".
+    ordering: str = "none"
+    presort_scheduled_tile_bytes: int = 0
+    presort_distinct_tile_bytes: int = 0
 
     @property
     def tile_bytes_per_nnz(self) -> float:
@@ -82,47 +91,44 @@ class StreamStats:
     def index_bytes_per_nnz(self) -> float:
         return self.index_stream_bytes / max(self.nnz, 1)
 
+    @property
+    def scheduled_over_distinct(self) -> float:
+        """The tile re-fetch factor (≥ 1.0) the reorder pass attacks."""
+        return self.scheduled_tile_bytes / max(self.distinct_tile_bytes, 1)
 
-def chunk_boundaries(tile_of_block, max_blocks: int) -> list[tuple[int, int]]:
-    """Split ``num_blocks`` blocks into chunks of at most ``max_blocks``.
-
-    Boundaries prefer output-row-tile edges: a chunk ends at the last
-    position ``<= max_blocks`` where ``tile_of_block`` changes, so a
-    tile's contiguous run of blocks stays in one chunk whenever it fits.
-    A run longer than ``max_blocks`` is split mid-tile (the executor's
-    ``out_init`` threading keeps that exact). Returns ``[start, stop)``
-    block ranges covering every block exactly once.
-    """
-    tiles = np.asarray(tile_of_block)
-    num_blocks = len(tiles)
-    assert max_blocks >= 1, max_blocks
-    bounds = []
-    start = 0
-    while start < num_blocks:
-        stop = min(start + max_blocks, num_blocks)
-        if stop < num_blocks:
-            aligned = stop
-            while aligned > start + 1 and tiles[aligned] == tiles[aligned - 1]:
-                aligned -= 1
-            if aligned > start and tiles[aligned] != tiles[aligned - 1]:
-                stop = aligned
-        bounds.append((start, stop))
-        start = stop
-    return bounds
+    @property
+    def presort_scheduled_over_distinct(self) -> float:
+        """Same ratio for the stream as it arrived (before reordering)."""
+        return (self.presort_scheduled_tile_bytes
+                / max(self.presort_distinct_tile_bytes, 1))
 
 
-def _schedule_fetch_stats(scheds, chunks, frow_tile: int, slab_cols: int,
-                          num_slabs: int, gi: int,
+# Chunk planning lives in the planner (so predict_stream_traffic can
+# replicate it without a circular import); re-exported here because this
+# module is where chunks are *executed*.
+chunk_boundaries = _planner.chunk_boundaries
+
+
+def _schedule_fetch_stats(scheds, chunks, chunk_windows, frow_tile: int,
+                          slab_cols: int, num_slabs: int, gi: int,
                           distinct_counts) -> tuple[int, int, int]:
-    """Counted (scheduled, distinct, pipelined) tile-fetch bytes."""
+    """Counted (scheduled, distinct, pipelined) tile-fetch bytes.
+
+    Counts exactly what the chunk loop issues: each chunk's schedule is
+    sliced to that chunk's tightened window widths, so ``scheduled`` is
+    Σ_chunks blocks · Σ_modes w_chunk — the same arithmetic
+    ``planner.predict_stream_traffic`` performs, which is why predicted
+    and counted bytes agree exactly.
+    """
     tile_bytes = frow_tile * slab_cols * gi
-    scheduled = sum(int(s.shape[0]) * int(s.shape[1]) for s in scheds)
+    scheduled = sum((stop - start) * sum(cw)
+                    for (start, stop), cw in zip(chunks, chunk_windows))
     distinct = sum(int(d.sum()) for d in distinct_counts)
     pipelined = 0
-    for s in scheds:
+    for i, s in enumerate(scheds):
         s = np.asarray(s)
-        for start, stop in chunks:
-            c = s[start:stop]
+        for (start, stop), cw in zip(chunks, chunk_windows):
+            c = s[start:stop, :cw[i]]
             if len(c) == 0:
                 continue
             pipelined += c.shape[1]                       # first block: all
@@ -140,6 +146,7 @@ def mttkrp_out_of_core(
     max_chunk_bytes: int | None = None,
     gather_dtype: str = "float32",
     interpret: bool | None = None,
+    ordering: str = "none",
 ):
     """One mode step, out-of-core: streamed factor tiles + chunked blocks.
 
@@ -161,23 +168,50 @@ def mttkrp_out_of_core(
         kernel, so the result is **bit-exact** against the resident
         gather backend for any chunk split.
 
+    ``ordering`` (a ``repro.reorder`` policy) permutes the stream
+    host-side for factor-tile locality before alignment: the counted
+    cost of the stream *as it arrived* is predicted first
+    (``planner.predict_stream_traffic`` — the same arithmetic as the
+    count below, so it is exact) and recorded in the stats'
+    ``presort_*`` fields; the run then pays the post-sort cost. The
+    result stays bit-exact **per stream** (streamed ≡ resident on the
+    same permuted stream); against the unsorted stream it differs only
+    by fp32 accumulation order.
+
     Returns ``(out, stats)`` — ``out`` is ``(rows_cap, R)`` float32,
     ``stats`` a :class:`StreamStats` of counted DMA traffic.
     """
     if gather_dtype not in ("float32", "bfloat16"):
         raise ValueError(f"unknown gather_dtype {gather_dtype!r}")
+    _reorder.validate_ordering(ordering)
     gdt = jnp.bfloat16 if gather_dtype == "bfloat16" else jnp.float32
     gi = 2 if gather_dtype == "bfloat16" else 4
     frow = _kernel.FACTOR_ROW_TILE
-    idx = jnp.asarray(idx)
-    val = jnp.asarray(val)
-    valid = jnp.asarray(valid)
-    nmodes = idx.shape[1]
+    nmodes = np.asarray(idx).shape[1]
     in_modes = [w for w in range(nmodes) if w != mode]
     k = len(in_modes)
     rank = factors[mode].shape[-1]
     rpad = _ops.padded_rank(rank)
     num_slabs = rpad // _kernel.RANK_SLAB
+
+    presort_scheduled_b = presort_distinct_b = 0
+    if ordering != "none":
+        traffic_kw = dict(
+            mode=mode, rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
+            rank=rank,
+            factor_rows=tuple(int(factors[w].shape[0]) for w in in_modes),
+            row_offset=int(row_offset), gather_itemsize=gi,
+            max_chunk_bytes=max_chunk_bytes)
+        pre = _planner.predict_stream_traffic(
+            idx, valid, ordering="none", **traffic_kw)
+        presort_scheduled_b = pre.scheduled_tile_bytes
+        presort_distinct_b = pre.distinct_tile_bytes
+        idx, val, valid, _ = _reorder.reorder_stream(
+            idx, val, valid, mode=mode, ordering=ordering,
+            tile_rows=tile_rows, row_offset=int(row_offset))
+    idx = jnp.asarray(idx)
+    val = jnp.asarray(val)
+    valid = jnp.asarray(valid)
 
     # Block-aligned streams, exactly like the in-jit gather paths.
     local_row = (idx[:, mode] - row_offset).astype(jnp.int32)
@@ -204,11 +238,8 @@ def mttkrp_out_of_core(
     # route for streams long enough to need chunking).
     tiles_np = np.asarray(idx_al) // frow                 # (n_pad, K)
     per_block = tiles_np.reshape(-1, blk, k)
-    st = np.sort(per_block, axis=1)
-    first = np.concatenate(
-        [np.ones((st.shape[0], 1, k), bool), st[:, 1:] != st[:, :-1]], axis=1)
-    rank_of = np.cumsum(first, axis=1) - 1                # distinct rank
-    distinct_counts = [first[:, :, i].sum(axis=1) for i in range(k)]
+    st, first, rank_of, dcounts = _planner.block_tile_analysis(per_block)
+    distinct_counts = [dcounts[:, i] for i in range(k)]
     windows = tuple(
         int(min(_planner.stream_window_tiles(blk, int(fmats[i].shape[0])),
                 max(1, int(distinct_counts[i].max()))))
@@ -227,26 +258,37 @@ def mttkrp_out_of_core(
         scheds.append(jnp.asarray(sched[:, :width].astype(np.int32)))
     scheds = tuple(scheds)
 
-    # Chunking: bound each chunk's aligned-operand bytes.
+    # Chunking: bound each chunk's aligned-operand bytes, then tighten
+    # every chunk's schedule width to its own blocks' distinct-tile
+    # maximum. Each chunk is a separate kernel call with its own static
+    # width, so the slice is free — and it is where a repro.reorder
+    # locality sort cashes in: post-sort, almost every chunk's window
+    # collapses to 1–2 while only the rare-tile tail pays the wide one.
+    # (Slicing columns [w_c, width) off a schedule is safe: distinct
+    # ranks occupy columns [0, d) with d <= w_c; everything past that is
+    # padding repeating the block's first tile.)
     num_blocks = n_pad // blk
-    per_block_bytes = blk * (4 + 4 + 4 * k) + 4 * sum(windows)
     if max_chunk_bytes is None:
         max_blocks = num_blocks
     else:
-        max_blocks = max(1, max_chunk_bytes // per_block_bytes)
+        max_blocks = max(
+            1, max_chunk_bytes // _planner.stream_chunk_bytes(blk, k, windows))
     chunks = chunk_boundaries(tile_of_block, max_blocks)
+    cwindows = _planner.chunk_window_tiles(dcounts, chunks, windows)
 
     tracer = _tracer_mod.get_tracer()
     out = jnp.zeros((rows_cap, rpad), jnp.float32)
     with tracer.span("oocore.mode_step", mode=mode, chunks=len(chunks)):
         for ci, (start, stop) in enumerate(chunks):
             sl = slice(start * blk, stop * blk)
+            cw = cwindows[ci]
             with tracer.span("oocore.chunk", chunk=ci,
                              blocks=stop - start):
                 out = _kernel.fused_mttkrp_nmode_gather_stream(
                     v_al[sl], idx_al[sl], fmats, r_al[sl],
                     tile_of_block[start:stop],
-                    tuple(s[start:stop] for s in scheds),
+                    tuple(s[start:stop, :cw[i]]
+                          for i, s in enumerate(scheds)),
                     rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
                     interpret=interpret, out_init=out)
                 if tracer.enabled:
@@ -254,7 +296,8 @@ def mttkrp_out_of_core(
 
     slab_cols = min(rpad, _kernel.RANK_SLAB)
     scheduled_b, distinct_b, pipelined_b = _schedule_fetch_stats(
-        scheds, chunks, frow, slab_cols, num_slabs, gi, distinct_counts)
+        scheds, chunks, cwindows, frow, slab_cols, num_slabs, gi,
+        distinct_counts)
     stats = StreamStats(
         backend=_planner.STREAM_BACKEND,
         chunks=len(chunks),
@@ -274,6 +317,9 @@ def mttkrp_out_of_core(
         resident_equiv_vmem_bytes=_kernel.gather_vmem_bytes(
             k, rpad, blk, tile_rows,
             sum(int(f.shape[0]) for f in fmats), gather_itemsize=gi),
+        ordering=ordering,
+        presort_scheduled_tile_bytes=presort_scheduled_b,
+        presort_distinct_tile_bytes=presort_distinct_b,
     )
     # The counted struct also lands in the shared obs registry — the
     # `oocore.*` namespace the span tracer and CI baseline read.

@@ -43,6 +43,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import numpy as np
+
 from ..kernels.mttkrp import kernel as _kernel
 from ..obs import counters as _obs
 
@@ -53,9 +55,15 @@ __all__ = [
     "STREAM_BACKEND",
     "FactorResidency",
     "ResidencyPlan",
+    "StreamTraffic",
     "backend_fits",
+    "block_tile_analysis",
+    "chunk_boundaries",
+    "chunk_window_tiles",
     "padded_rank",
     "plan_residency",
+    "predict_stream_traffic",
+    "stream_chunk_bytes",
     "stream_window_tiles",
 ]
 
@@ -182,7 +190,8 @@ def _normalize_factor_rows(factor_rows, num_in_modes: int):
 def backend_fits(backend: str, *, nmodes: int, rank: int, blk: int,
                  tile_rows: int, factor_rows=None,
                  vmem_budget: int = VMEM_BUDGET_BYTES,
-                 gather_itemsize: int = 4) -> bool:
+                 gather_itemsize: int = 4,
+                 window_tiles: Sequence[int] | None = None) -> bool:
     """Hard VMEM feasibility of one backend — the single predicate.
 
     This is what bounds a calibration table's preference in
@@ -192,6 +201,12 @@ def backend_fits(backend: str, *, nmodes: int, rank: int, blk: int,
     and materializing-last-resort backends (``ref``, ``segsum``,
     ``pallas``) always "fit" — they manage their own memory. The
     ``*_bf16`` names fold into ``gather_itemsize=2``.
+
+    ``window_tiles`` (streaming rung only) overrides the static
+    worst-case per-input-mode window widths with measured/predicted
+    ones — :func:`predict_stream_traffic` on a locality-reordered
+    stream (``repro.reorder``) typically certifies the rung at budgets
+    the data-blind bound cannot.
     """
     if backend.endswith("_bf16"):
         backend = backend[:-len("_bf16")]
@@ -217,9 +232,13 @@ def backend_fits(backend: str, *, nmodes: int, rank: int, blk: int,
     if backend == STREAM_BACKEND:
         if total is None:
             return False
-        windows = (tuple(stream_window_tiles(blk, r) for r in per_mode)
-                   if per_mode is not None
-                   else (stream_window_tiles(blk, total),) * k)
+        if window_tiles is not None:
+            windows = tuple(int(w) for w in window_tiles)
+            assert len(windows) == k, (windows, k)
+        elif per_mode is not None:
+            windows = tuple(stream_window_tiles(blk, r) for r in per_mode)
+        else:
+            windows = (stream_window_tiles(blk, total),) * k
         return _kernel.gather_stream_vmem_bytes(
             k, rpad, blk, tile_rows, windows,
             gather_itemsize=gather_itemsize) <= vmem_budget
@@ -228,12 +247,14 @@ def backend_fits(backend: str, *, nmodes: int, rank: int, blk: int,
 
 
 def _factor_states(per_mode, total, k: int, policy: str, blk: int,
-                   rank_cols: int, gi: int) -> tuple[FactorResidency, ...]:
+                   rank_cols: int, gi: int,
+                   windows=None) -> tuple[FactorResidency, ...]:
     rows_list = per_mode if per_mode is not None else (total,) * k
     states = []
-    for rows in rows_list:
+    for i, rows in enumerate(rows_list):
         if policy == "stream":
-            w = stream_window_tiles(blk, rows)
+            w = (int(windows[i]) if windows is not None
+                 else stream_window_tiles(blk, rows))
             # A window covering every tile of the factor is de-facto
             # whole residency — the plan records it honestly.
             pol = "whole" if w >= factor_row_tiles(rows) else "stream"
@@ -251,7 +272,9 @@ def plan_residency(*, nmodes: int, rank: int, blk: int = 512,
                    tile_rows: int = 128, factor_rows=None,
                    vmem_budget: int = VMEM_BUDGET_BYTES,
                    gather_itemsize: int = 4,
-                   allow_stream: bool = True) -> ResidencyPlan:
+                   allow_stream: bool = True,
+                   window_tiles: Sequence[int] | None = None
+                   ) -> ResidencyPlan:
     """The full static residency ladder for one mode step.
 
     In order (each rung = one feasibility predicate against
@@ -271,6 +294,16 @@ def plan_residency(*, nmodes: int, rank: int, blk: int = 512,
     sequence for exact stream windows); without it they are skipped and
     the decision is bit-identical to the pre-gather dispatch.
     ``allow_stream=False`` removes rung 4 (the pre-oocore ladder).
+
+    ``window_tiles`` overrides rung 4's static worst-case window widths
+    with measured/predicted per-input-mode ones (see
+    :func:`predict_stream_traffic`): after a ``repro.reorder`` locality
+    sort the per-block distinct-tile maxima shrink well below the
+    data-blind ``min(blk, ceil(rows/128))`` bound, and this is how the
+    stream rung gets certified — and picked — at budgets where the
+    static bound overflows. The ladder stays monotone in the budget:
+    the override only changes rung 4's (fixed) byte cost, never the
+    predicate shape.
     """
     k, rpad = nmodes - 1, padded_rank(rank)
     gi = gather_itemsize
@@ -311,17 +344,22 @@ def plan_residency(*, nmodes: int, rank: int, blk: int = 512,
                 factors=_factor_states(per_mode, total, k, "slab", blk,
                                        min(rpad, _kernel.RANK_SLAB), gi))
         if allow_stream and backend_fits(STREAM_BACKEND,
-                                         factor_rows=factor_rows, **kw):
-            windows = (tuple(stream_window_tiles(blk, r) for r in per_mode)
-                       if per_mode is not None
-                       else (stream_window_tiles(blk, total),) * k)
+                                         factor_rows=factor_rows,
+                                         window_tiles=window_tiles, **kw):
+            if window_tiles is not None:
+                windows = tuple(int(w) for w in window_tiles)
+            elif per_mode is not None:
+                windows = tuple(stream_window_tiles(blk, r) for r in per_mode)
+            else:
+                windows = (stream_window_tiles(blk, total),) * k
             return finish(
                 STREAM_BACKEND,
                 _kernel.gather_stream_vmem_bytes(
                     k, rpad, blk, tile_rows, windows, gather_itemsize=gi),
                 rank_slabs=slabs, window=windows,
                 factors=_factor_states(per_mode, total, k, "stream", blk,
-                                       min(rpad, _kernel.RANK_SLAB), gi))
+                                       min(rpad, _kernel.RANK_SLAB), gi,
+                                       windows=windows))
     if backend_fits("pallas_fused", **kw):
         return finish("pallas_fused",
                       _kernel.fused_vmem_bytes(k, rpad, blk, tile_rows,
@@ -334,3 +372,235 @@ def plan_residency(*, nmodes: int, rank: int, blk: int = 512,
     return finish("pallas",
                   _kernel.fused_vmem_bytes(0, rpad, blk, tile_rows,
                                            gather_itemsize=gi))
+
+
+# ---------------------------------------------------------------------------
+# Chunk planning (shared by the executor and the traffic predictor)
+# ---------------------------------------------------------------------------
+
+def chunk_boundaries(tile_of_block, max_blocks: int) -> list[tuple[int, int]]:
+    """Split ``num_blocks`` blocks into chunks of at most ``max_blocks``.
+
+    Boundaries prefer output-row-tile edges: a chunk ends at the last
+    position ``<= max_blocks`` where ``tile_of_block`` changes, so a
+    tile's contiguous run of blocks stays in one chunk whenever it fits.
+    A run longer than ``max_blocks`` is split mid-tile (the executor's
+    ``out_init`` threading keeps that exact). Returns ``[start, stop)``
+    block ranges covering every block exactly once.
+    """
+    tiles = np.asarray(tile_of_block)
+    num_blocks = len(tiles)
+    assert max_blocks >= 1, max_blocks
+    bounds = []
+    start = 0
+    while start < num_blocks:
+        stop = min(start + max_blocks, num_blocks)
+        if stop < num_blocks:
+            aligned = stop
+            while aligned > start + 1 and tiles[aligned] == tiles[aligned - 1]:
+                aligned -= 1
+            if aligned > start and tiles[aligned] != tiles[aligned - 1]:
+                stop = aligned
+        bounds.append((start, stop))
+        start = stop
+    return bounds
+
+
+def chunk_window_tiles(distinct_counts, chunks, windows):
+    """Per-chunk stream-window widths, tightened chunk by chunk.
+
+    Every chunk is its own kernel call with its own *static* schedule
+    width, so the width only has to cover that chunk's blocks — not the
+    global worst block. ``distinct_counts`` is the ``(num_blocks, K)``
+    per-block distinct-tile matrix from :func:`block_tile_analysis`,
+    ``chunks`` the ``[start, stop)`` list from :func:`chunk_boundaries`,
+    ``windows`` the global (VMEM-certified) per-mode widths that cap
+    each chunk's. Returns one ``K``-tuple per chunk.
+
+    This is the mechanism a ``repro.reorder`` locality sort cashes in
+    on: post-sort, tile diversity concentrates into few blocks, so
+    almost every chunk's width collapses to 1–2 while only the chunk
+    holding the rare-tile tail pays the wide window. On an unsorted
+    stream the per-block counts are i.i.d.-ish and every chunk's max is
+    near the global max — tightening buys little.
+    """
+    distinct_counts = np.asarray(distinct_counts)
+    k = distinct_counts.shape[1]
+    assert len(windows) == k, (windows, k)
+    return [
+        tuple(int(min(windows[i],
+                      max(1, int(distinct_counts[start:stop, i].max()))))
+              for i in range(k))
+        for start, stop in chunks
+    ]
+
+
+def stream_chunk_bytes(blk: int, k: int, windows) -> int:
+    """Aligned-operand bytes one block contributes to a chunk budget.
+
+    Values (f32) + local rows (i32) + ``K`` index streams (i32) per
+    slot, plus one ``i32`` schedule row entry per window slot — the
+    arrays the executor slices per chunk.
+    """
+    return blk * (4 + 4 + 4 * k) + 4 * sum(windows)
+
+
+# ---------------------------------------------------------------------------
+# Data-dependent stream-traffic prediction (the repro.reorder cost model)
+# ---------------------------------------------------------------------------
+
+def block_tile_analysis(per_block_tiles: np.ndarray):
+    """Per-block sorted-distinct analysis of an aligned tile stream.
+
+    ``per_block_tiles`` is ``(num_blocks, blk, K)`` int — the
+    ``FACTOR_ROW_TILE``-tile id of every aligned stream slot, per
+    gathered mode. Returns ``(sorted_tiles, first, rank_of,
+    distinct_counts)``: the per-block sorted tiles, the first-occurrence
+    mask, each slot's distinct rank, and the ``(num_blocks, K)``
+    distinct-tile counts. This is the **one** analysis behind the
+    executor's window tightening + tile schedules + counted
+    ``StreamStats`` *and* :func:`predict_stream_traffic` — sharing it is
+    what makes the planner's prediction and the executor's count agree
+    exactly (``tests/test_reorder.py`` pins it).
+    """
+    st = np.sort(per_block_tiles, axis=1)
+    first = np.concatenate(
+        [np.ones((st.shape[0], 1, st.shape[2]), bool),
+         st[:, 1:] != st[:, :-1]], axis=1)
+    rank_of = np.cumsum(first, axis=1) - 1
+    distinct_counts = first.sum(axis=1)
+    return st, first, rank_of, distinct_counts
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamTraffic:
+    """Predicted tile-fetch traffic of one streamed mode step.
+
+    Counted from the data (per-block distinct-tile analysis of the
+    block-aligned stream), so it matches the executor's ``StreamStats``
+    exactly — the point being that :func:`plan_residency` can consume
+    ``window_tiles`` *before* running anything, and pick the stream
+    rung when a ``repro.reorder`` pass makes it win.
+    """
+
+    ordering: str                   # stream the prediction was made on
+    num_blocks: int
+    nnz: int
+    window_tiles: tuple[int, ...]   # global tightened widths, per input mode
+    scheduled_tiles: int            # Σ_chunks blocks_c * Σ chunk windows
+    distinct_tiles: int             # Σ per-block distinct, all modes
+    tile_bytes: int                 # one FACTOR_ROW_TILE x slab tile
+    rank_slabs: int
+    chunks: int = 1
+
+    @property
+    def scheduled_tile_bytes(self) -> int:
+        return self.scheduled_tiles * self.tile_bytes * self.rank_slabs
+
+    @property
+    def distinct_tile_bytes(self) -> int:
+        return self.distinct_tiles * self.tile_bytes * self.rank_slabs
+
+    @property
+    def distinct_over_scheduled(self) -> float:
+        """Fraction of scheduled fetches that are distinct (1.0 = no waste)."""
+        return self.distinct_tiles / max(self.scheduled_tiles, 1)
+
+    @property
+    def scheduled_over_distinct(self) -> float:
+        """The re-fetch factor the reorder pass attacks (≥ 1.0)."""
+        return self.scheduled_tiles / max(self.distinct_tiles, 1)
+
+
+def predict_stream_traffic(idx, valid, *, mode: int, rows_cap: int,
+                           blk: int, tile_rows: int, rank: int,
+                           factor_rows: Sequence[int],
+                           row_offset: int = 0, gather_itemsize: int = 4,
+                           ordering: str = "as-given",
+                           max_chunk_bytes: int | None = None,
+                           frow_tile: int = FACTOR_ROW_TILE
+                           ) -> StreamTraffic:
+    """Predict the stream kernel's tile traffic for a nonzero stream.
+
+    A host-side (numpy) replication of ``ops.build_block_layout`` +
+    ``_align_to_blocks`` on the index streams, followed by
+    :func:`block_tile_analysis` — i.e. *exactly* the arithmetic the
+    executor performs, on exactly the stream it would run, without
+    touching a kernel. The input contract matches the executor's:
+    ``idx (cap, N)`` with valid elements first and output-tile runs
+    contiguous ascending (a row-sorted or ``repro.reorder``-ed stream).
+
+    ``factor_rows`` is the per-input-mode factor row count (window
+    bound). ``max_chunk_bytes`` replicates the executor's chunk
+    budgeting (same :func:`chunk_boundaries` + :func:`stream_chunk_bytes`
+    arithmetic), so the scheduled count includes the per-chunk window
+    tightening the executor applies — the mechanism that turns a
+    locality sort into counted byte savings. The returned
+    :class:`StreamTraffic` carries the global tightened
+    ``window_tiles`` — feed them to ``plan_residency(window_tiles=...)``
+    to certify the stream rung under the *measured* window, and the
+    predicted ``distinct/scheduled`` ratio the committed
+    ``BENCH_reorder.json`` tracks before/after reordering.
+    """
+    idx = np.asarray(idx)
+    valid = np.asarray(valid, bool)
+    cap, nmodes = idx.shape
+    in_modes = [w for w in range(nmodes) if w != mode]
+    k = len(in_modes)
+    assert len(factor_rows) == k, (factor_rows, k)
+    num_tiles = rows_cap // tile_rows
+    n_pad = ((cap + blk - 1) // blk) * blk + num_tiles * blk
+
+    local_row = np.where(valid, idx[:, mode].astype(np.int64) - row_offset, 0)
+    tile_of_elem = np.where(valid, local_row // tile_rows, num_tiles)
+    counts = np.bincount(tile_of_elem[valid].astype(np.int64),
+                         minlength=num_tiles)[:num_tiles]
+    padded = ((counts + blk - 1) // blk) * blk
+    offsets = np.concatenate([[0], np.cumsum(padded)]).astype(np.int64)
+    first_of_tile = np.searchsorted(tile_of_elem, tile_of_elem, side="left")
+    rank_in_tile = np.arange(cap, dtype=np.int64) - first_of_tile
+    slot = np.where(valid, offsets[tile_of_elem] + rank_in_tile, n_pad)
+
+    idx_in = np.where(valid[:, None], idx[:, in_modes], 0).astype(np.int64)
+    aligned = np.zeros((n_pad + 1, k), np.int64)
+    aligned[slot] = idx_in          # padding slots stay 0 -> tile 0
+    per_block = (aligned[:n_pad] // frow_tile).reshape(-1, blk, k)
+    _, _, _, distinct_counts = block_tile_analysis(per_block)
+
+    windows = tuple(
+        int(min(stream_window_tiles(blk, int(factor_rows[i])),
+                max(1, int(distinct_counts[:, i].max()))))
+        for i in range(k))
+    num_blocks = per_block.shape[0]
+
+    # The executor's chunking, replicated: tile_of_block from the block
+    # layout's offsets, the chunk-byte budget, then per-chunk window
+    # tightening — each chunk is its own kernel call whose static
+    # schedule width only has to cover that chunk's blocks.
+    block_start = np.arange(num_blocks, dtype=np.int64) * blk
+    tile_of_block = np.clip(
+        np.searchsorted(offsets, block_start, side="right") - 1,
+        0, num_tiles - 1)
+    if max_chunk_bytes is None:
+        max_blocks = num_blocks
+    else:
+        max_blocks = max(
+            1, max_chunk_bytes // stream_chunk_bytes(blk, k, windows))
+    chunks = chunk_boundaries(tile_of_block, max_blocks)
+    cwindows = chunk_window_tiles(distinct_counts, chunks, windows)
+    scheduled = sum((stop - start) * sum(cw)
+                    for (start, stop), cw in zip(chunks, cwindows))
+
+    rpad = padded_rank(rank)
+    return StreamTraffic(
+        ordering=ordering,
+        num_blocks=num_blocks,
+        nnz=int(valid.sum()),
+        window_tiles=windows,
+        scheduled_tiles=int(scheduled),
+        distinct_tiles=int(distinct_counts.sum()),
+        tile_bytes=frow_tile * min(rpad, _kernel.RANK_SLAB)
+        * gather_itemsize,
+        rank_slabs=rpad // _kernel.RANK_SLAB,
+        chunks=len(chunks),
+    )

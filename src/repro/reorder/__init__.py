@@ -1,0 +1,34 @@
+"""repro.reorder — locality-aware nonzero ordering (dynamic remapping).
+
+The preprocessing pass that closes the stream kernel's tile re-fetch
+gap: permute each mode's FLYCOO nonzero stream so consecutive blocks
+reuse the same ``FACTOR_ROW_TILE``-row factor tiles. Policy definitions
+and the permutation machinery live in :mod:`repro.reorder.ordering`;
+the consumers are ``core.flycoo.pack_mode`` (preprocessing-time),
+``kernels.mttkrp.ops.build_block_layout`` (in-jit, per mode step, so
+the order survives dynamic remapping between modes) and
+``oocore.mttkrp_out_of_core`` (host-side, with counted before/after
+traffic). ``python -m repro.reorder`` is the bit-exact smoke CI runs.
+
+Data-flow picture in ``docs/ARCHITECTURE.md``; the counted effect on
+the stream rung in ``docs/kernels.md`` and ``BENCH_reorder.json``.
+"""
+from .ordering import (
+    MORTON_BITS,
+    ORDERINGS,
+    locality_keys,
+    locality_lexsort,
+    morton_key_words,
+    reorder_stream,
+    validate_ordering,
+)
+
+__all__ = [
+    "MORTON_BITS",
+    "ORDERINGS",
+    "locality_keys",
+    "locality_lexsort",
+    "morton_key_words",
+    "reorder_stream",
+    "validate_ordering",
+]

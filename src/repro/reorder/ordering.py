@@ -1,0 +1,170 @@
+"""Locality-aware nonzero ordering — the paper's remapping idea, aimed
+at the stream kernel's tile re-fetch gap.
+
+``pallas_fused_gather_stream`` (``repro.oocore``) DMAs a window of
+``FACTOR_ROW_TILE``-row factor tiles per nonzero block; the counted gap
+PR 5 measured is that on an unsorted stream consecutive blocks touch
+near-disjoint tile sets, so ``scheduled`` bytes run ~3× ``distinct``
+(``BENCH_oocore.json``). The FLYCOO stream contract only fixes the
+*output-row-tile* grouping (``ops.build_block_layout`` needs per-tile
+runs contiguous, nothing more), which leaves the order of nonzeros
+**within** an output-tile run completely free. This module spends that
+freedom: permute each run so nonzeros touching the same gathered factor
+tiles sit in the same blocks.
+
+Two policies beyond ``"none"``:
+
+* ``"tile"`` — per-mode tile-cluster sort: within each output-tile run,
+  sort by the tuple of ``FACTOR_ROW_TILE``-tile ids of the gathered
+  (input) modes, first gathered mode major. Greedy per-mode locality.
+* ``"morton"`` — Morton/Z-order interleaving of the per-mode tile ids:
+  bit-plane interleave across all gathered modes at once, so no single
+  mode dominates and locality is traded evenly — the multi-mode
+  analogue of the paper's remapped layout (and of ALTO's bit-interleaved
+  linearization).
+
+Everything here is a **true permutation** of the nonzero stream (a
+bijection; ``tests/test_reorder.py`` property-checks multiset
+preservation per mode), so CP-ALS results differ from the unsorted
+stream only by fp32 accumulation order. The sort is paid once per mode
+at preprocessing time and amortized across every ALS sweep, exactly
+like the FLYCOO permutation itself.
+
+Key helpers are written against the *array operator set* shared by
+numpy and ``jax.numpy`` (``//``, ``>>``, ``&``, ``|``, ``.clip``), so
+:func:`locality_keys` / :func:`morton_key_words` produce bit-identical
+keys host-side (``np.lexsort`` in :func:`locality_lexsort`) and inside
+jit (``jnp.lexsort`` in ``ops.build_block_layout``'s ``order_keys``
+path) — the agreement ``tests/test_reorder.py`` pins bit-exactly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..kernels.mttkrp import kernel as _kernel
+from ..obs import counters as _obs
+
+__all__ = [
+    "FACTOR_ROW_TILE",
+    "MORTON_BITS",
+    "ORDERINGS",
+    "locality_keys",
+    "locality_lexsort",
+    "morton_key_words",
+    "reorder_stream",
+    "validate_ordering",
+]
+
+FACTOR_ROW_TILE = _kernel.FACTOR_ROW_TILE
+
+# The ordering policies every layer accepts (FlycooTensor / ModePlan /
+# DynasorRuntime / mttkrp_device_step / the oocore executor).
+ORDERINGS = ("none", "tile", "morton")
+
+# Bits of tile id each mode contributes to the Morton code: 16 bits =
+# 65536 FACTOR_ROW_TILE-row tiles = 8.4M factor rows per mode. Tile ids
+# beyond that clamp (ordering quality degrades gracefully; the
+# permutation stays a bijection regardless).
+MORTON_BITS = 16
+
+# jax runs with x64 disabled (int32 default), so interleaved codes are
+# packed into words of at most this many bits — int32-safe on both the
+# host and the jit path.
+_WORD_BITS = 30
+
+
+def validate_ordering(ordering: str) -> str:
+    if ordering not in ORDERINGS:
+        raise ValueError(
+            f"unknown ordering {ordering!r}: expected one of {ORDERINGS}")
+    return ordering
+
+
+def morton_key_words(tiles, bits: int = MORTON_BITS):
+    """Morton (Z-order) code of per-mode tile ids, as int32-safe words.
+
+    ``tiles`` is ``(n, K)`` — one tile id per gathered mode. The K
+    modes' low ``bits`` bits are interleaved MSB-first (bit ``b`` of
+    mode 0, then bit ``b`` of mode 1, …) and packed into words of at
+    most 30 bits. Returns a tuple of words, **most significant first** —
+    the comparison order ``lexsort`` needs. Works on numpy and
+    ``jax.numpy`` arrays alike (operator arithmetic only).
+    """
+    k = tiles.shape[1]
+    tiles = tiles.clip(0, (1 << bits) - 1)
+    planes = [(tiles[:, i] >> b) & 1
+              for b in reversed(range(bits)) for i in range(k)]
+    words = []
+    for start in range(0, len(planes), _WORD_BITS):
+        word = planes[start]
+        for plane in planes[start + 1:start + _WORD_BITS]:
+            word = (word << 1) | plane
+        words.append(word)
+    return tuple(words)
+
+
+def locality_keys(idx_in, ordering: str,
+                  frow_tile: int = FACTOR_ROW_TILE):
+    """Sort keys realizing ``ordering`` over gathered-mode indices.
+
+    ``idx_in`` is ``(n, K)`` — the factor-row index of each nonzero in
+    each gathered (input) mode. Returns a tuple of equal-length key
+    arrays, most significant first (``()`` for ``"none"``). Generic
+    over numpy / ``jax.numpy`` inputs; the jit consumer is
+    ``ops.build_block_layout(order_keys=...)``.
+    """
+    validate_ordering(ordering)
+    if ordering == "none":
+        return ()
+    tiles = idx_in // frow_tile
+    if ordering == "tile":
+        return tuple(tiles[:, i] for i in range(tiles.shape[1]))
+    return morton_key_words(tiles)
+
+
+def locality_lexsort(idx_in, ordering: str, *, primaries=(),
+                     frow_tile: int = FACTOR_ROW_TILE) -> np.ndarray:
+    """Host-side stable permutation: primaries, then locality, then position.
+
+    ``primaries`` are given most significant first (e.g. the output-tile
+    id, or ``(owner, output_row)`` for ``flycoo.pack_mode``); the
+    locality keys order elements *within* each primary group, and the
+    original position breaks remaining ties — so ``ordering="none"``
+    degenerates to a stable sort by ``primaries`` alone.
+    """
+    idx_in = np.asarray(idx_in)
+    keys = locality_keys(idx_in, ordering, frow_tile=frow_tile)
+    seq = ((np.arange(idx_in.shape[0]),)
+           + tuple(reversed(keys))
+           + tuple(reversed([np.asarray(p) for p in primaries])))
+    perm = np.lexsort(seq)
+    if ordering != "none":
+        _obs.add("reorder.perms", ordering=ordering)
+    return perm
+
+
+def reorder_stream(idx, val, valid, *, mode: int, ordering: str,
+                   tile_rows: int, row_offset: int = 0,
+                   frow_tile: int = FACTOR_ROW_TILE):
+    """Permute one mode's nonzero stream for factor-tile locality.
+
+    Input contract = the executor's (``oocore.mttkrp_out_of_core``):
+    ``idx (cap, N)`` sorted by output row with trailing invalids. The
+    returned stream keeps what downstream layers actually require —
+    valid elements first, output-**tile** runs contiguous and ascending
+    (``ops.build_block_layout``'s real precondition) — while ordering
+    each run by the policy's locality keys. Returns
+    ``(idx', val', valid', perm)`` with ``x'[i] = x[perm[i]]``.
+    """
+    idx = np.asarray(idx)
+    val = np.asarray(val)
+    valid = np.asarray(valid, bool)
+    nmodes = idx.shape[1]
+    in_modes = [w for w in range(nmodes) if w != mode]
+    local_row = idx[:, mode].astype(np.int64) - row_offset
+    # Invalid elements sort after every real output tile.
+    out_tile = np.where(valid, local_row // tile_rows, np.int64(2 ** 62))
+    idx_in = np.where(valid[:, None], idx[:, in_modes], 0)
+    perm = locality_lexsort(idx_in, ordering, primaries=(out_tile,),
+                            frow_tile=frow_tile)
+    return idx[perm], val[perm], valid[perm], perm

@@ -206,7 +206,8 @@ def compare_dispatch(table, key) -> dict:
 
 def plan_modes(table, ft, rank: int, *,
                allowed: Sequence[str] | None = None,
-               num_workers: int | None = None) -> tuple[ModePlan, ...] | None:
+               num_workers: int | None = None,
+               ordering: str = "none") -> tuple[ModePlan, ...] | None:
     """Tuned per-mode ``(backend, blk, tile_rows)`` plans for a tensor.
 
     For every output mode the model scores each measured ``(blk,
@@ -222,6 +223,10 @@ def plan_modes(table, ft, rank: int, *,
     evidence. Pass ``allowed`` explicitly (e.g.
     ``table.model.backends``) to let a bf16-opted-in runtime plan with
     them.
+
+    ``ordering`` (:data:`repro.reorder.ORDERINGS`) is carried verbatim
+    into every plan — the locality policy is a numerics-order choice
+    the caller owns, not something the cost model selects.
     """
     model = table if isinstance(table, CostModel) else CostModel(table)
     D = num_workers if num_workers is not None else ft.params.num_workers
@@ -273,5 +278,6 @@ def plan_modes(table, ft, rank: int, *,
                         for r in factor_rows)
                   if backend == _planner.STREAM_BACKEND else ())
         plans.append(ModePlan(backend=backend, blk=blk, tile_rows=tile_rows,
-                              rank_slabs=slabs, window_tiles=window))
+                              rank_slabs=slabs, window_tiles=window,
+                              ordering=ordering))
     return tuple(plans)

@@ -1,10 +1,16 @@
-"""FLYCOO format invariants (paper §III)."""
+"""FLYCOO format invariants (paper §III) — including the PR-8
+``repro.reorder`` extension: ``build_flycoo(ordering=...)`` /
+``pack_mode`` locality sorting and ``build_block_layout``'s
+``order_keys`` path keep every layout contract intact."""
+import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.flycoo import build_flycoo, choose_partition_params, pack_mode
 from repro.core.tensors import frostt_like, random_sparse_tensor
+from repro.kernels.mttkrp import ops as kops
+from repro.reorder.ordering import ORDERINGS, locality_keys
 
 
 def small_tensor(seed=0, nnz=300):
@@ -64,6 +70,122 @@ def test_partition_params_satisfy_eq2(seed):
         assert k >= 1
         if dim > 8:
             assert k >= 8 or m == 1
+
+
+def _block_layout_invariants(row, valid, idx_in, ordering, *, rows_cap,
+                             blk, tile_rows):
+    """build_block_layout contract, with and without locality keys."""
+    n_el = len(row)
+    n_pad = kops.n_pad_for(n_el, rows_cap, blk, tile_rows)
+    keys = locality_keys(idx_in, ordering)
+    slot, tile_of_block = kops.build_block_layout(
+        jnp.asarray(row), jnp.asarray(valid), rows_cap=rows_cap, blk=blk,
+        tile_rows=tile_rows, order_keys=keys or None)
+    slot = np.asarray(slot)
+    tile_of_block = np.asarray(tile_of_block)
+
+    # invalid -> dump slot; valid -> injective in-range slots
+    assert np.all(slot[~valid] == n_pad)
+    vslots = slot[valid]
+    assert np.all((0 <= vslots) & (vslots < n_pad))
+    assert len(np.unique(vslots)) == len(vslots)
+    # each element's block is attributed to exactly its own output tile —
+    # locality keys reorder *within* a tile, never across
+    vtile = row[valid] // tile_rows
+    assert np.array_equal(tile_of_block[vslots // blk], vtile)
+    assert np.all(np.diff(tile_of_block) >= 0)
+    # tile_of_block is independent of the ordering policy (same nonzeros
+    # per tile, so the same block counts)
+    base_slot, base_tiles = kops.build_block_layout(
+        jnp.asarray(row), jnp.asarray(valid), rows_cap=rows_cap, blk=blk,
+        tile_rows=tile_rows)
+    assert np.array_equal(tile_of_block, np.asarray(base_tiles))
+    # within a tile, slot order realizes the locality keys (ascending
+    # lexicographically, most significant first)
+    if keys:
+        key_mat = np.stack([np.asarray(kk) for kk in keys], axis=1)
+        for t in np.unique(vtile):
+            sel = vtile == t
+            run = key_mat[valid][sel][np.argsort(vslots[sel])]
+            for prev, cur in zip(run, run[1:]):
+                assert tuple(prev) <= tuple(cur)
+    return slot, tile_of_block
+
+
+@pytest.mark.parametrize("ordering", ORDERINGS)
+def test_build_block_layout_order_keys_invariants(ordering):
+    rng = np.random.default_rng(3)
+    tiles, tile_rows, blk, n_el = 5, 8, 16, 230
+    rows_cap = tiles * tile_rows
+    row = np.sort(rng.integers(0, rows_cap, n_el)).astype(np.int32)
+    valid = np.ones(n_el, bool)
+    valid[-11:] = False
+    idx_in = rng.integers(0, 4000, size=(n_el, 2)).astype(np.int32)
+    idx_in[~valid] = 0
+    _block_layout_invariants(row, valid, idx_in, ordering,
+                             rows_cap=rows_cap, blk=blk,
+                             tile_rows=tile_rows)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_el=st.integers(1, 300),
+    tiles=st.integers(1, 6),
+    tile_rows=st.sampled_from([8, 16]),
+    blk=st.sampled_from([8, 16, 32]),
+    k=st.integers(1, 4),
+    ordering=st.sampled_from(ORDERINGS),
+    frac_invalid=st.floats(0.0, 0.4),
+)
+def test_build_block_layout_order_keys_property(seed, n_el, tiles,
+                                                tile_rows, blk, k, ordering,
+                                                frac_invalid):
+    rows_cap = tiles * tile_rows
+    rng = np.random.default_rng(seed)
+    row = np.sort(rng.integers(0, rows_cap, n_el)).astype(np.int32)
+    valid = np.ones(n_el, bool)
+    ninv = int(n_el * frac_invalid)
+    if ninv:
+        valid[-ninv:] = False
+    idx_in = rng.integers(0, 10_000, size=(n_el, k)).astype(np.int32)
+    idx_in[~valid] = 0
+    _block_layout_invariants(row, valid, idx_in, ordering,
+                             rows_cap=rows_cap, blk=blk,
+                             tile_rows=tile_rows)
+
+
+@pytest.mark.parametrize("ordering", ["tile", "morton"])
+def test_pack_mode_with_ordering_keeps_contract(ordering):
+    """A reorder policy on the FLYCOO tensor must not disturb anything
+    pack_mode guarantees: same multiset per device, rows still sorted
+    and owned — the locality keys only break ties within an output row."""
+    t = small_tensor()
+    base = build_flycoo(t, 4, m_bounds=(4, 16), g_bounds=(8, 64))
+    ft = build_flycoo(t, 4, m_bounds=(4, 16), g_bounds=(8, 64),
+                      ordering=ordering)
+    assert ft.ordering == ordering
+    for n in range(t.nmodes):
+        idx0, val0, mask0 = pack_mode(base, n)
+        idx, val, mask = pack_mode(ft, n)
+        assert mask.sum() == t.nnz
+        for d in range(4):
+            rows = idx[d, mask[d], n]
+            assert np.all(np.diff(rows) >= 0)          # still row-sorted
+            assert np.all(rows // ft.modes[n].rows_cap == d)   # owned
+            # same nonzeros per device as the unordered pack (a
+            # permutation within the device's slice)
+            assert np.array_equal(np.sort(val[d, mask[d]]),
+                                  np.sort(val0[d, mask0[d]]))
+            order0 = np.lexsort(idx0[d, mask0[d]].T)
+            order1 = np.lexsort(idx[d, mask[d]].T)
+            assert np.array_equal(idx0[d, mask0[d]][order0],
+                                  idx[d, mask[d]][order1])
+
+
+def test_build_flycoo_rejects_unknown_ordering():
+    with pytest.raises(ValueError, match="unknown ordering"):
+        build_flycoo(small_tensor(), 4, ordering="hilbert")
 
 
 def test_frostt_profiles_build():

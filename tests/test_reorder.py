@@ -1,0 +1,487 @@
+"""repro.reorder — locality-aware nonzero ordering (PR-8 tentpole).
+
+Coverage per the issue checklist:
+  * every policy in ``ORDERINGS`` is a **true permutation** of the
+    stream (bijectivity + per-mode multiset preservation, hypothesis
+    sweep + example-based), keeping valid-first / output-tile-run
+    contracts intact;
+  * the in-jit ``build_block_layout(order_keys=...)`` path
+    (``mttkrp_device_step(ordering=...)``) is bit-exact against the
+    host-side ``reorder_stream`` permutation — same keys, same layout,
+    same sums;
+  * the out-of-core executor stays bit-exact vs the resident gather on
+    a forced-multichunk skewed workload for every ordering, and
+    ``planner.predict_stream_traffic`` agrees with the executor's
+    counted ``StreamStats`` **exactly** (scheduled/distinct bytes,
+    window tiles, chunk count) — post-sort and presort;
+  * reordered CP-ALS matches the unsorted fit within fp32
+    accumulation-order tolerance for N ∈ {3, 4, 5} (subprocess, 4 host
+    devices — the ``test_distributed`` pattern);
+  * schedule invariants: ``chunk_window_tiles`` tightens per chunk but
+    never exceeds the global (VMEM-certified) windows,
+    ``chunk_boundaries`` covers every block exactly once, and
+    ``stream_chunk_bytes`` is the executor's budget arithmetic;
+  * ``morton_key_words`` key properties: int32-safe words,
+    injectivity, componentwise monotonicity.
+"""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tensors import random_sparse_tensor, zipf_4d
+from repro.kernels.mttkrp import ops as kops
+from repro.oocore import planner
+from repro.oocore.executor import mttkrp_out_of_core
+from repro.reorder.ordering import (
+    FACTOR_ROW_TILE,
+    MORTON_BITS,
+    ORDERINGS,
+    locality_keys,
+    locality_lexsort,
+    morton_key_words,
+    reorder_stream,
+    validate_ordering,
+)
+
+BLK, TILE = 32, 8
+
+
+def _sorted_stream(shape, nnz, mode, seed=0, invalid_tail=0,
+                   distribution="powerlaw"):
+    """Executor-contract stream: sorted by output row, trailing invalids."""
+    t = random_sparse_tensor(shape, nnz, seed=seed,
+                             distribution=distribution)
+    order = np.argsort(t.indices[:, mode], kind="stable")
+    idx = t.indices[order].astype(np.int32)
+    val = t.values[order].astype(np.float32)
+    valid = np.ones(len(val), bool)
+    if invalid_tail:
+        valid[-invalid_tail:] = False
+        val = np.where(valid, val, 0.0).astype(np.float32)
+    return idx, val, valid
+
+
+def _factors(shape, rank, seed=0):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal((d, rank)), jnp.float32)
+            for d in shape]
+
+
+def _check_permutation(idx, val, valid, mode, ordering, tile_rows=TILE):
+    idx2, val2, valid2, perm = reorder_stream(
+        idx, val, valid, mode=mode, ordering=ordering, tile_rows=tile_rows)
+    n = len(val)
+    # bijection: perm is a permutation of range(n), and the outputs are
+    # exactly the inputs routed through it
+    assert np.array_equal(np.sort(perm), np.arange(n))
+    assert np.array_equal(idx2, idx[perm])
+    assert np.array_equal(val2, val[perm])
+    assert np.array_equal(valid2, valid[perm])
+    # per-mode multiset preserved (valid entries)
+    for m in range(idx.shape[1]):
+        assert np.array_equal(np.sort(idx2[valid2, m]),
+                              np.sort(idx[valid, m]))
+    # downstream contracts: valid-first, output-tile runs ascending
+    nv = int(valid.sum())
+    assert valid2[:nv].all() and not valid2[nv:].any()
+    out_tile = idx2[valid2, mode] // tile_rows
+    assert np.all(np.diff(out_tile) >= 0)
+    return idx2, val2, valid2, perm
+
+
+# ---------------------------------------------------------------------------
+# Permutation property: bijectivity + multiset preservation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ordering", ORDERINGS)
+@pytest.mark.parametrize("nmodes", [3, 4])
+def test_reorder_stream_is_true_permutation(ordering, nmodes):
+    shape = (40, 300, 170, 60)[:nmodes]
+    idx, val, valid = _sorted_stream(shape, 250, 0, seed=nmodes,
+                                     invalid_tail=9)
+    _check_permutation(idx, val, valid, 0, ordering)
+
+
+def test_reorder_none_is_stable_identity_on_sorted_stream():
+    """ordering="none" degenerates to a stable sort by output tile —
+    on an already row-sorted stream that's the identity."""
+    idx, val, valid = _sorted_stream((40, 300, 170), 200, 0, seed=1)
+    _, _, _, perm = reorder_stream(idx, val, valid, mode=0,
+                                   ordering="none", tile_rows=TILE)
+    assert np.array_equal(perm, np.arange(len(val)))
+
+
+def test_validate_ordering_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown ordering"):
+        validate_ordering("hilbert")
+    with pytest.raises(ValueError, match="unknown ordering"):
+        reorder_stream(np.zeros((4, 3), np.int32), np.zeros(4, np.float32),
+                       np.ones(4, bool), mode=0, ordering="zcurve",
+                       tile_rows=TILE)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    nnz=st.integers(20, 300),
+    nmodes=st.integers(3, 5),
+    mode=st.integers(0, 2),
+    tile_rows=st.sampled_from([8, 16]),
+    ordering=st.sampled_from(ORDERINGS),
+    invalid_frac=st.floats(0.0, 0.3),
+)
+def test_reorder_stream_permutation_property(seed, nnz, nmodes, mode,
+                                             tile_rows, ordering,
+                                             invalid_frac):
+    shape = (40, 300, 170, 60, 20)[:nmodes]
+    idx, val, valid = _sorted_stream(shape, nnz, mode, seed=seed,
+                                     invalid_tail=int(nnz * invalid_frac))
+    _check_permutation(idx, val, valid, mode, ordering,
+                       tile_rows=tile_rows)
+
+
+# ---------------------------------------------------------------------------
+# In-jit order_keys path ≡ host permutation, bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ordering", ["tile", "morton"])
+@pytest.mark.parametrize("nmodes", [3, 4])
+def test_in_jit_ordering_bitexact_vs_host_reorder(ordering, nmodes):
+    """mttkrp_device_step(ordering=X) sorts inside jit via
+    build_block_layout's order_keys; feeding it the host-permuted stream
+    with ordering="none" must produce the identical block layout and
+    therefore the identical (bit-exact) output."""
+    shape = (20, 300, 170, 6)[:nmodes]
+    idx, val, valid = _sorted_stream(shape, 220, 0, seed=nmodes,
+                                     invalid_tail=5)
+    factors = _factors(shape, 128, seed=nmodes)
+    rows_cap = -(-shape[0] // TILE) * TILE
+    kw = dict(mode=0, rows_cap=rows_cap, row_offset=0, blk=BLK,
+              tile_rows=TILE, interpret=True,
+              backend="pallas_fused_gather")
+    in_jit = kops.mttkrp_device_step(
+        jnp.asarray(idx), jnp.asarray(val), jnp.asarray(valid), factors,
+        ordering=ordering, **kw)
+    idx2, val2, valid2, _ = reorder_stream(
+        idx, val, valid, mode=0, ordering=ordering, tile_rows=TILE)
+    host = kops.mttkrp_device_step(
+        jnp.asarray(idx2), jnp.asarray(val2), jnp.asarray(valid2), factors,
+        ordering="none", **kw)
+    np.testing.assert_array_equal(np.asarray(in_jit), np.asarray(host))
+
+
+def test_locality_keys_shapes():
+    idx_in = np.array([[0, 8], [17, 3], [5, 200]], np.int32)
+    assert locality_keys(idx_in, "none") == ()
+    tile_keys = locality_keys(idx_in, "tile")
+    assert len(tile_keys) == 2
+    assert np.array_equal(tile_keys[0], idx_in[:, 0] // FACTOR_ROW_TILE)
+    morton_keys = locality_keys(idx_in, "morton")
+    assert len(morton_keys) == -(-2 * MORTON_BITS // 30)
+    for kk in tile_keys + morton_keys:
+        assert kk.shape == (3,)
+
+
+# ---------------------------------------------------------------------------
+# Executor: bit-exact per ordering + predicted == counted, exactly
+# ---------------------------------------------------------------------------
+
+def _skewed_case():
+    shape = (2000, 1000, 700, 40)
+    t = zipf_4d(shape, 1500, alpha=1.3, seed=7)
+    mode = 3
+    order = np.argsort(t.indices[:, mode], kind="stable")
+    idx = t.indices[order].astype(np.int32)
+    val = t.values[order].astype(np.float32)
+    valid = np.ones(len(val), bool)
+    factors = _factors(shape, 16, seed=0)
+    rows_cap = -(-shape[mode] // TILE) * TILE
+    budget = 16 * planner.stream_chunk_bytes(BLK, 3, (8, 8, 8))
+    return shape, idx, val, valid, factors, mode, rows_cap, budget
+
+
+def _run_ordering(ordering):
+    shape, idx, val, valid, factors, mode, rows_cap, budget = _skewed_case()
+    out, stats = mttkrp_out_of_core(
+        idx, val, valid, factors, mode=mode, rows_cap=rows_cap, blk=BLK,
+        tile_rows=TILE, max_chunk_bytes=budget, ordering=ordering)
+    return (shape, idx, val, valid, factors, mode, rows_cap, budget,
+            out, stats)
+
+
+@pytest.mark.parametrize("ordering", ORDERINGS)
+def test_executor_bitexact_and_predicted_eq_counted(ordering):
+    (shape, idx, val, valid, factors, mode, rows_cap, budget,
+     out, stats) = _run_ordering(ordering)
+    assert stats.chunks >= 3, stats.chunks
+    assert stats.ordering == ordering
+
+    # bit-exact against the resident gather on the same permuted stream
+    # (the in-jit ordering path — so this also cross-checks host vs jit)
+    resident = kops.mttkrp_device_step(
+        jnp.asarray(idx), jnp.asarray(val), jnp.asarray(valid), factors,
+        mode=mode, rows_cap=rows_cap, row_offset=0, blk=BLK,
+        tile_rows=TILE, interpret=True, backend="pallas_fused_gather",
+        ordering=ordering)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(resident))
+
+    # planner prediction on the post-sort stream == executor count, EXACT
+    if ordering == "none":
+        idx2, valid2 = idx, valid
+    else:
+        idx2, _, valid2, _ = reorder_stream(
+            idx, val, valid, mode=mode, ordering=ordering, tile_rows=TILE)
+    traffic_kw = dict(
+        mode=mode, rows_cap=rows_cap, blk=BLK, tile_rows=TILE, rank=16,
+        factor_rows=tuple(shape[w] for w in range(4) if w != mode),
+        max_chunk_bytes=budget)
+    t_post = planner.predict_stream_traffic(idx2, valid2,
+                                            ordering=ordering, **traffic_kw)
+    assert t_post.scheduled_tile_bytes == stats.scheduled_tile_bytes
+    assert t_post.distinct_tile_bytes == stats.distinct_tile_bytes
+    assert t_post.window_tiles == stats.window_tiles
+    assert t_post.chunks == stats.chunks
+
+    # presort fields == a fresh prediction on the unsorted stream
+    t_pre = planner.predict_stream_traffic(idx, valid, ordering="none",
+                                           **traffic_kw)
+    if ordering == "none":
+        assert stats.presort_scheduled_tile_bytes == 0
+        assert stats.presort_distinct_tile_bytes == 0
+    else:
+        assert stats.presort_scheduled_tile_bytes == \
+            t_pre.scheduled_tile_bytes
+        assert stats.presort_distinct_tile_bytes == t_pre.distinct_tile_bytes
+
+
+def test_reorder_reduces_refetch_on_skewed_stream():
+    """The seeded counted check behind BENCH_reorder.json's headline:
+    on the skewed zipf stream both locality policies lower the
+    scheduled/distinct re-fetch ratio vs the unsorted stream."""
+    ratios = {}
+    for ordering in ORDERINGS:
+        *_, stats = _run_ordering(ordering)
+        ratios[ordering] = stats.scheduled_over_distinct
+        if ordering != "none":
+            # the presort prediction reproduces the "none" run's ratio
+            assert stats.presort_scheduled_over_distinct == \
+                pytest.approx(ratios["none"])
+    assert ratios["tile"] < ratios["none"], ratios
+    assert ratios["morton"] < ratios["none"], ratios
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    nnz=st.integers(100, 400),
+    ordering=st.sampled_from(ORDERINGS),
+    max_chunk_bytes=st.one_of(st.none(), st.integers(2_000, 40_000)),
+)
+def test_executor_ordering_bitexact_property(seed, nnz, ordering,
+                                             max_chunk_bytes):
+    """Streamed+reordered ≡ resident on the same permuted stream, for
+    random workloads and chunk budgets."""
+    shape = (40, 300, 170)
+    idx, val, valid = _sorted_stream(shape, nnz, 0, seed=seed)
+    factors = _factors(shape, 128, seed=seed)
+    rows_cap = -(-shape[0] // TILE) * TILE
+    out, _ = mttkrp_out_of_core(
+        idx, val, valid, factors, mode=0, rows_cap=rows_cap, blk=BLK,
+        tile_rows=TILE, max_chunk_bytes=max_chunk_bytes, ordering=ordering)
+    resident = kops.mttkrp_device_step(
+        jnp.asarray(idx), jnp.asarray(val), jnp.asarray(valid), factors,
+        mode=0, rows_cap=rows_cap, row_offset=0, blk=BLK, tile_rows=TILE,
+        interpret=True, backend="pallas_fused_gather", ordering=ordering)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(resident))
+
+
+# ---------------------------------------------------------------------------
+# Schedule invariants: per-chunk tightening, chunk cover, budget bytes
+# ---------------------------------------------------------------------------
+
+def _chunk_invariants(dcounts, chunks, windows):
+    cwindows = planner.chunk_window_tiles(dcounts, chunks, windows)
+    assert len(cwindows) == len(chunks)
+    for (start, stop), cw in zip(chunks, cwindows):
+        assert len(cw) == len(windows)
+        for i, w in enumerate(cw):
+            assert 1 <= w <= windows[i]
+            # exact tightening: the chunk's own distinct-tile max,
+            # clamped into [1, global window]
+            assert w == min(windows[i],
+                            max(1, int(dcounts[start:stop, i].max())))
+    return cwindows
+
+
+def test_chunk_window_tiles_example():
+    dcounts = np.array([[1, 4], [1, 1], [2, 1], [5, 1], [1, 1], [1, 2]])
+    windows = (4, 3)
+    chunks = [(0, 2), (2, 4), (4, 6)]
+    cw = _chunk_invariants(dcounts, chunks, windows)
+    assert cw == [(1, 3), (4, 1), (1, 2)]
+    # single chunk covering everything reproduces the global windows
+    assert planner.chunk_window_tiles(dcounts, [(0, 6)], windows) \
+        == [windows]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    num_blocks=st.integers(1, 60),
+    k=st.integers(1, 4),
+    max_blocks=st.integers(1, 20),
+)
+def test_chunk_schedule_invariants_property(seed, num_blocks, k, max_blocks):
+    rng = np.random.default_rng(seed)
+    dcounts = rng.integers(1, 9, size=(num_blocks, k))
+    tiles = np.sort(rng.integers(0, max(1, num_blocks // 3), num_blocks))
+    windows = tuple(int(w) for w in dcounts.max(axis=0))
+    chunks = planner.chunk_boundaries(tiles, max_blocks)
+    # exact cover, in order, within budget
+    assert chunks[0][0] == 0 and chunks[-1][1] == num_blocks
+    for (a, b), (c, _) in zip(chunks, chunks[1:]):
+        assert b == c and a < b
+    assert all(b - a <= max_blocks for a, b in chunks)
+    _chunk_invariants(dcounts, chunks, windows)
+
+
+def test_stream_chunk_bytes_formula():
+    blk, k, windows = 32, 3, (9, 4, 2)
+    got = planner.stream_chunk_bytes(blk, k, windows)
+    # values f32 + rows i32 + K index streams i32, plus one i32 schedule
+    # entry per window slot — per block
+    assert got == blk * (4 + 4 + 4 * k) + 4 * sum(windows)
+
+
+# ---------------------------------------------------------------------------
+# Morton key properties
+# ---------------------------------------------------------------------------
+
+def test_morton_key_words_int32_safe_and_deterministic():
+    rng = np.random.default_rng(0)
+    tiles = rng.integers(0, 1 << MORTON_BITS, size=(200, 3))
+    w1 = morton_key_words(tiles)
+    w2 = morton_key_words(tiles.copy())
+    assert len(w1) == -(-3 * MORTON_BITS // 30)
+    for a, b in zip(w1, w2):
+        assert np.array_equal(a, b)
+        assert a.min() >= 0 and a.max() < (1 << 30)     # int32-safe words
+
+
+def test_morton_key_words_injective_and_monotone():
+    rng = np.random.default_rng(1)
+    tiles = np.unique(rng.integers(0, 1 << MORTON_BITS, size=(300, 2)),
+                      axis=0)
+    words = np.stack(morton_key_words(tiles), axis=1)
+    # injective on distinct in-range tuples
+    assert len(np.unique(words, axis=0)) == len(tiles)
+    # componentwise monotone: a <= b per coordinate => code(a) <= code(b)
+    # in the words' lexicographic (most-significant-first) order
+    a = rng.integers(0, 1 << (MORTON_BITS - 1), size=(400, 3))
+    b = a + rng.integers(0, 1 << (MORTON_BITS - 1), size=a.shape)
+    wa = np.stack(morton_key_words(a), axis=1)
+    wb = np.stack(morton_key_words(b), axis=1)
+    neq = wa != wb
+    first = np.argmax(neq, axis=1)
+    rows = np.arange(len(a))
+    differs = neq.any(axis=1)
+    assert np.all(wa[rows[differs], first[differs]]
+                  <= wb[rows[differs], first[differs]])
+
+
+def test_morton_single_mode_orders_like_tile_ids():
+    tiles = np.array([[7], [0], [3], [512], [3]])
+    words = morton_key_words(tiles)
+    order = np.lexsort(tuple(reversed(words)))
+    assert np.array_equal(tiles[order, 0], np.sort(tiles[:, 0]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 200),
+       k=st.integers(1, 4))
+def test_morton_key_words_property(seed, n, k):
+    rng = np.random.default_rng(seed)
+    tiles = rng.integers(0, 1 << MORTON_BITS, size=(n, k))
+    words = morton_key_words(tiles)
+    assert len(words) == -(-k * MORTON_BITS // 30)
+    for w in words:
+        assert w.shape == (n,)
+        assert w.min() >= 0 and w.max() < (1 << 30)
+    # equal tuples get equal codes (the keys are a function of the tiles)
+    wm = np.stack(words, axis=1)
+    _, inv = np.unique(tiles, axis=0, return_inverse=True)
+    for g in range(inv.max() + 1):
+        rows = wm[inv == g]
+        assert (rows == rows[0]).all()
+
+
+def test_locality_lexsort_primaries_dominate():
+    """Locality keys only ever reorder *within* a primary group."""
+    rng = np.random.default_rng(2)
+    idx_in = rng.integers(0, 4000, size=(300, 2))
+    primary = np.sort(rng.integers(0, 7, size=300))
+    for ordering in ORDERINGS:
+        perm = locality_lexsort(idx_in, ordering, primaries=(primary,))
+        assert np.array_equal(np.sort(perm), np.arange(300))
+        assert np.array_equal(primary[perm], primary)   # still grouped
+        if ordering == "tile":
+            tiles = idx_in[perm, 0] // FACTOR_ROW_TILE
+            for p in np.unique(primary):
+                assert np.all(np.diff(tiles[primary == p]) >= 0)
+
+
+# ---------------------------------------------------------------------------
+# CP-ALS: reordered fit == unsorted fit up to fp32 accumulation order
+# ---------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax
+from jax.sharding import Mesh
+from repro.core.tensors import random_sparse_tensor
+from repro.core.flycoo import build_flycoo
+from repro.core import distributed as dist
+from repro.core.cpals import cp_als_distributed
+
+mesh = Mesh(np.array(jax.devices()), (dist.AXIS,))
+CASES = {
+    3: ((40, 30, 20), 350),
+    4: ((20, 15, 12, 10), 300),
+    5: ((12, 10, 8, 7, 6), 250),
+}
+for nmodes, (shape, nnz) in CASES.items():
+    t = random_sparse_tensor(shape, nnz, seed=nmodes,
+                             distribution="powerlaw")
+    ft = build_flycoo(t, 4, m_bounds=(2, 8), g_bounds=(8, 64),
+                      cache_bytes=1 << 20)
+    fits = {}
+    for ordering in ("none", "tile", "morton"):
+        res = cp_als_distributed(ft, 4, mesh, iters=3, seed=1, tol=0.0,
+                                 backend="pallas_fused",
+                                 ordering=ordering)
+        assert np.isfinite(res.fits).all(), (nmodes, ordering, res.fits)
+        fits[ordering] = res.fits
+    for ordering in ("tile", "morton"):
+        # a true permutation changes only fp32 accumulation order
+        diff = np.abs(np.asarray(fits[ordering])
+                      - np.asarray(fits["none"])).max()
+        assert diff < 1e-3, (nmodes, ordering, diff, fits)
+print("REORDER-CPALS-OK")
+"""
+
+
+@pytest.mark.slow
+def test_cpals_fit_invariant_under_reordering_subprocess():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert "REORDER-CPALS-OK" in out.stdout, out.stdout + out.stderr
