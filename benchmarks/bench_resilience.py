@@ -1,0 +1,182 @@
+"""Resilience overhead: what the safety net costs when nothing fails.
+
+The PR-9 layer must be effectively free on the happy path and bounded
+under faults. Four sections, all on a small fixed workload:
+
+  * ``drivers`` — fault-free wall time of the fused one-jit sweep vs
+    the stepped driver (what an active policy forces) vs stepped +
+    per-sweep checkpointing: the cost of host-side call boundaries and
+    of atomic persistence, as ratios over the fused baseline;
+  * ``chaos`` — the same stepped run under a seeded fault schedule:
+    wall-time ratio vs the fault-free stepped run plus the counted
+    recovery story (injected / retries / degradations) — re-traces are
+    the dominant cost, so the ratio bounds "what does a fault cost";
+  * ``solve_guard`` — ``guarded_solve`` vs the plain
+    ``linalg.solve`` it replaced, jitted, healthy input (the clean
+    branch must not pay for the SVD floor it guards);
+  * ``checkpoint`` — save/restore latency and on-disk bytes of one
+    sweep state (factors + λ + fits + the packed stream).
+
+Everything lands in ``BENCH_resilience.json``.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import distributed as dist
+from repro.core.cpals import cp_als_distributed
+from repro.core.flycoo import build_flycoo
+from repro.core.tensors import random_sparse_tensor
+from repro.obs import counters as _obs
+from repro.resilience import (
+    RetryPolicy,
+    guarded_solve,
+    inject,
+    seeded_schedule,
+)
+from repro.resilience import checkpoint as rckpt
+
+from .common import row, timeit, write_bench_json
+
+_SHAPE, _NNZ, _RANK = (40, 30, 20), 350, 8
+
+
+def _workload():
+    t = random_sparse_tensor(_SHAPE, _NNZ, seed=0, distribution="powerlaw")
+    ft = build_flycoo(t, 1, m_bounds=(2, 8), g_bounds=(8, 64))
+    mesh = Mesh(np.array(jax.devices()[:1]), (dist.AXIS,))
+    return ft, mesh
+
+
+def _wall(fn) -> tuple[float, object]:
+    jax.clear_caches()          # include re-trace cost: that IS the story
+    t0 = time.perf_counter()
+    out = fn()
+    return time.perf_counter() - t0, out
+
+
+def _driver_rows(ft, mesh, iters: int) -> list[dict]:
+    def fused():
+        return cp_als_distributed(ft, _RANK, mesh, iters=iters, seed=0,
+                                  tol=0.0, backend="auto")
+
+    def stepped():
+        return cp_als_distributed(ft, _RANK, mesh, iters=iters, seed=0,
+                                  tol=0.0, backend="auto",
+                                  resilience=RetryPolicy())
+
+    rows = []
+    with _obs.use_registry():
+        base_s, base = _wall(fused)
+    rows.append(row("resilience", section="drivers", driver="fused",
+                    iters=iters, wall_s=round(base_s, 3),
+                    fit=round(base.fit, 6), ratio=1.0))
+    with _obs.use_registry():
+        step_s, step = _wall(stepped)
+    rows.append(row("resilience", section="drivers", driver="stepped_policy",
+                    iters=iters, wall_s=round(step_s, 3),
+                    fit=round(step.fit, 6),
+                    ratio=round(step_s / base_s, 2)))
+    with tempfile.TemporaryDirectory() as d:
+        with _obs.use_registry() as reg:
+            ck_s, ck = _wall(lambda: cp_als_distributed(
+                ft, _RANK, mesh, iters=iters, seed=0, tol=0.0,
+                backend="auto", resilience=RetryPolicy(),
+                checkpoint_dir=d))
+            saves = int(reg.get("resilience.checkpoint.saves"))
+        disk = sum(os.path.getsize(os.path.join(r, f))
+                   for r, _, fs in os.walk(d) for f in fs)
+    rows.append(row("resilience", section="drivers",
+                    driver="stepped_policy_ckpt", iters=iters,
+                    wall_s=round(ck_s, 3), fit=round(ck.fit, 6),
+                    ratio=round(ck_s / base_s, 2), ckpt_saves=saves,
+                    ckpt_disk_bytes=disk))
+
+    # chaos: same stepped run, seeded faults at the in-sweep sites.
+    specs = seeded_schedule(7, sites=("ops.kernel", "distributed.remap"),
+                            per_site=1, horizon=2)
+    with _obs.use_registry() as reg, inject(specs) as inj:
+        chaos_s, chaos = _wall(stepped)
+        snap = reg.snapshot()
+    rows.append(row(
+        "resilience", section="chaos", iters=iters,
+        wall_s=round(chaos_s, 3), ratio_vs_stepped=round(chaos_s / step_s, 2),
+        fit_drift=round(abs(chaos.fit - base.fit), 8),
+        injected=len(inj.injected), pending=len(inj.pending()),
+        retries=int(sum(v for k, v in snap.items()
+                        if k.startswith("resilience.retries"))),
+        degradations=int(sum(v for k, v in snap.items()
+                             if k.startswith("resilience.degradations"))),
+        interpret_fallbacks=int(sum(
+            v for k, v in snap.items()
+            if k.startswith("resilience.interpret_fallbacks")))))
+    return rows
+
+
+def _solve_guard_rows(rank: int) -> list[dict]:
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((rank + 4, rank)).astype(np.float32)
+    V = jnp.asarray(A.T @ A + np.eye(rank, dtype=np.float32))
+    M = jnp.asarray(rng.standard_normal((256, rank)).astype(np.float32))
+    eye = jnp.eye(rank, dtype=jnp.float32)
+
+    plain = jax.jit(lambda V, M: jnp.linalg.solve(V + 1e-9 * eye, M.T).T)
+    guarded = jax.jit(guarded_solve)
+    plain_s = timeit(plain, V, M, warmup=2, iters=5)
+    guard_s = timeit(guarded, V, M, warmup=2, iters=5)
+    X, level = guarded(V, M)
+    return [row("resilience", section="solve_guard", rank=rank,
+                plain_us=round(plain_s * 1e6, 1),
+                guarded_us=round(guard_s * 1e6, 1),
+                ratio=round(guard_s / max(plain_s, 1e-9), 2),
+                level=int(level))]
+
+
+def _checkpoint_rows(ft, mesh) -> list[dict]:
+    rng = np.random.default_rng(0)
+    factors = [rng.standard_normal((d, _RANK)).astype(np.float32)
+               for d in _SHAPE]
+    lam = np.ones(_RANK, np.float32)
+    nnz_cap = ft.nnz
+    stream = (rng.integers(0, 16, size=(1, nnz_cap, 3)).astype(np.int32),
+              rng.standard_normal((1, nnz_cap)).astype(np.float32),
+              np.ones((1, nnz_cap), bool))
+    state = rckpt.make_state(factors, lam, [0.9], sweep=0, rank=_RANK,
+                             backend="auto", stream=stream)
+    with tempfile.TemporaryDirectory() as d, _obs.use_registry():
+        mgr = rckpt.make_manager(d)
+        t0 = time.perf_counter()
+        rckpt.save_state(mgr, state)
+        save_s = time.perf_counter() - t0
+        disk = sum(os.path.getsize(os.path.join(r, f))
+                   for r, _, fs in os.walk(d) for f in fs)
+        t0 = time.perf_counter()
+        restored, sweep = rckpt.restore_state(mgr, state)
+        restore_s = time.perf_counter() - t0
+        assert sweep == 0 and restored is not None
+    return [row("resilience", section="checkpoint", nnz=nnz_cap,
+                save_ms=round(save_s * 1e3, 2),
+                restore_ms=round(restore_s * 1e3, 2),
+                disk_bytes=disk)]
+
+
+def run(quick: bool = True) -> list[dict]:
+    ft, mesh = _workload()
+    iters = 2 if quick else 5
+    rows = _driver_rows(ft, mesh, iters)
+    rows += _solve_guard_rows(_RANK if quick else 32)
+    rows += _checkpoint_rows(ft, mesh)
+    write_bench_json("resilience", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_rows
+    print_rows(run())

@@ -20,7 +20,8 @@ import time
 from . import (bench_bf16_convergence, bench_collective_traffic,
                bench_dispatch, bench_lowering, bench_memory, bench_oocore,
                bench_preprocess, bench_rank, bench_remap_fusion,
-               bench_remap_traffic, bench_reorder, bench_scaling,
+               bench_remap_traffic, bench_reorder, bench_resilience,
+               bench_scaling,
                bench_schedule, bench_total_time, roofline)
 from . import common
 from .common import print_rows, write_bench_json
@@ -40,6 +41,7 @@ SUITES = {
     "bf16_convergence": bench_bf16_convergence.run,   # bf16 gathers, fit gap
     "oocore": bench_oocore.run,                  # out-of-core streamed gather
     "reorder": bench_reorder.run,                # locality-ordered streams
+    "resilience": bench_resilience.run,          # fault-injection overhead
     "lowering": bench_lowering.run,              # interpret=False Mosaic status
 }
 

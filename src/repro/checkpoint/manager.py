@@ -37,17 +37,43 @@ def _flatten_with_paths(tree):
     return out
 
 
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    # Directory fsync is what makes a rename durable on POSIX; platforms
+    # that refuse O_RDONLY on directories (Windows) simply skip it.
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - non-POSIX
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save_pytree(tree, path: str) -> None:
     os.makedirs(path, exist_ok=True)
     manifest = {}
     for key, leaf in _flatten_with_paths(tree):
         arr = np.asarray(jax.device_get(leaf))
         fname = key.replace("/", "__") + ".npy"
-        np.save(os.path.join(path, fname), arr)
+        fpath = os.path.join(path, fname)
+        np.save(fpath, arr)
+        _fsync_file(fpath)
         manifest[key] = {"file": fname, "shape": list(arr.shape),
                          "dtype": str(arr.dtype)}
-    with open(os.path.join(path, "tree.json"), "w") as f:
+    mpath = os.path.join(path, "tree.json")
+    with open(mpath, "w") as f:
         json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
 
 
 def restore_pytree(template, path: str, shardings=None):
@@ -61,8 +87,14 @@ def restore_pytree(template, path: str, shardings=None):
                else [None] * len(keys))
     for key, sh in zip(keys, flat_sh):
         arr = np.load(os.path.join(path, manifest[key]["file"]))
-        leaves.append(jax.device_put(arr, sh) if sh is not None
-                      else jax.numpy.asarray(arr))
+        if arr.dtype.kind not in "biufc":
+            # Non-numeric leaves (config-fingerprint strings) have no JAX
+            # dtype — they stay host numpy for the caller to validate.
+            leaves.append(arr)
+        elif sh is not None:
+            leaves.append(jax.device_put(arr, sh))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
     treedef = jax.tree.structure(template)
     return jax.tree.unflatten(treedef, leaves)
 
@@ -72,6 +104,13 @@ class CheckpointManager:
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
+        # A crash mid-save leaves a tmp.<step> behind; it can never be
+        # restored from (no rename happened), so sweep it at startup
+        # rather than letting dead half-written trees accumulate.
+        for name in os.listdir(directory):
+            if name.startswith("tmp."):
+                shutil.rmtree(os.path.join(directory, name),
+                              ignore_errors=True)
 
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.dir, f"step_{step:010d}")
@@ -83,10 +122,17 @@ class CheckpointManager:
         save_pytree(tree, tmp)
         with open(os.path.join(tmp, "_DONE"), "w") as f:
             f.write(str(step))
+            f.flush()
+            os.fsync(f.fileno())
+        # fsync order is the atomicity: every file in tmp is durable,
+        # then the tmp dir entry list, then the rename, then the parent
+        # so the rename itself survives power loss.
+        _fsync_dir(tmp)
         final = self._step_dir(step)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
+        _fsync_dir(self.dir)
         self._gc()
         return final
 

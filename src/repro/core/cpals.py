@@ -29,6 +29,9 @@ from jax.sharding import Mesh
 from ..compat import shard_map as _shard_map
 from ..obs import counters as _obs
 from ..obs import tracer as _tracer
+from ..resilience import checkpoint as _ckpt
+from ..resilience import numerics as _numerics
+from ..resilience import policy as _rpolicy
 from . import distributed as dist
 from .flycoo import FlycooTensor
 from .mttkrp import mttkrp as mttkrp_jax
@@ -62,16 +65,27 @@ def _normalize_columns(A, sweep0: bool):
     return A / norms, norms
 
 
-def _solve_v(grams, mode: int, M, ridge: float = 1e-9):
-    """A_n ← M_n · V⁺ with V = ⊛_{w≠n} G_w (Hadamard of grams)."""
+def _solve_v_guarded(grams, mode: int, M, ridge: float = 1e-9):
+    """A_n ← M_n · V⁺ with V = ⊛_{w≠n} G_w — guarded; returns (A, level).
+
+    The solve runs through :func:`repro.resilience.numerics.guarded_solve`
+    (non-finite/ill-conditioned gram → escalated ridge → lstsq); ``level``
+    indexes ``GUARD_LEVELS`` so host-side drivers can count escalations
+    (``resilience.solve.guards``). Level 0 is bit-identical to the
+    historical plain ``solve(V + ridge·I)``.
+    """
     R = M.shape[1]
     V = jnp.ones((R, R), M.dtype)
     for w, G in enumerate(grams):
         if w != mode:
             V = V * G
-    V = V + ridge * jnp.eye(R, dtype=M.dtype)
-    # Solve Vᵀ Xᵀ = Mᵀ (V symmetric) — cheaper/stabler than explicit pinv.
-    return jnp.linalg.solve(V, M.T).T
+    return _numerics.guarded_solve(V, M, ridge=ridge)
+
+
+def _solve_v(grams, mode: int, M, ridge: float = 1e-9):
+    """A_n ← M_n · V⁺ with V = ⊛_{w≠n} G_w (Hadamard of grams)."""
+    X, _level = _solve_v_guarded(grams, mode, M, ridge=ridge)
+    return X
 
 
 def fit_from_parts(x_norm_sq, lam, grams, M_last, A_last):
@@ -109,13 +123,23 @@ def _sweep_jax(indices, values, factors, lam, shape: tuple[int, ...],
 
 
 def cp_als(tensor, rank: int, *, iters: int = 10, seed: int = 0,
-           tol: float = 1e-5, tracer=None) -> CPResult:
+           tol: float = 1e-5, tracer=None,
+           checkpoint_dir: str | None = None,
+           checkpoint_every: int = 1) -> CPResult:
     """Single-device CP-ALS (paper Alg. 1) — the correctness oracle.
 
     ``tracer`` (default: the process tracer, normally the no-op) records
     one ``sweep`` span per ALS sweep; the whole sweep is a single jitted
     call here, so there is no per-mode breakdown — use
     :func:`cp_als_distributed` for the full span taxonomy.
+
+    ``checkpoint_dir`` turns on resumable sweeps: every
+    ``checkpoint_every``-th completed sweep is persisted atomically
+    (factors, λ, fit trace, sweep index) through the
+    ``repro.checkpoint`` manager, and a rerun pointed at the same
+    directory restores the newest complete checkpoint and continues —
+    a killed job resumes warm instead of restarting, converging to the
+    same decomposition (pinned by ``tests/test_resilience.py``).
     """
     tracer = _tracer.get_tracer() if tracer is None else tracer
     rng = np.random.default_rng(seed)
@@ -125,13 +149,29 @@ def cp_als(tensor, rank: int, *, iters: int = 10, seed: int = 0,
     idx = jnp.asarray(tensor.indices, jnp.int32)
     val = jnp.asarray(tensor.values, jnp.float32)
     fits: list[float] = []
-    for it in range(iters):
+    start_it = 0
+    mgr = _ckpt.make_manager(checkpoint_dir)
+    if mgr is not None:
+        template = _ckpt.make_state(
+            [np.asarray(f) for f in factors], np.asarray(lam), fits,
+            sweep=0, rank=rank, backend="jax")
+        state, _step = _ckpt.restore_state(mgr, template)
+        if state is not None:
+            factors = [jnp.asarray(f) for f in state["factors"]]
+            lam = jnp.asarray(state["lam"])
+            fits = [float(x) for x in state["fits"]]
+            start_it = int(state["sweep"]) + 1
+    for it in range(start_it, iters):
         with tracer.span("sweep", sweep=it, driver="single"):
             factors, lam, fit = _sweep_jax(idx, val, tuple(factors), lam,
                                            tuple(tensor.shape), it == 0)
             fit = float(fit)
         _obs.add("cpals.sweeps", driver="single")
         fits.append(fit)
+        if mgr is not None and (it + 1) % checkpoint_every == 0:
+            _ckpt.save_state(mgr, _ckpt.make_state(
+                [np.asarray(f) for f in factors], np.asarray(lam), fits,
+                sweep=it, rank=rank, backend="jax"))
         if it > 0 and abs(fits[-1] - fits[-2]) < tol:
             break
     return CPResult([np.asarray(f) for f in factors], np.asarray(lam),
@@ -264,37 +304,93 @@ def make_instrumented_mode_fns(rt: dist.DynasorRuntime, mesh: Mesh, *,
     return mttkrp_fns, remap_fns
 
 
+def _ckpt_state(rt, backend, factors, lam, fits, sweep, idx, val, mask):
+    """Assemble one distributed-sweep checkpoint (stream included)."""
+    return _ckpt.make_state(
+        [np.asarray(f) for f in factors], np.asarray(lam), fits,
+        sweep=sweep, rank=rt.rank, ordering=rt.ordering, backend=backend,
+        stream=(np.asarray(idx), np.asarray(val), np.asarray(mask)))
+
+
 def _cp_als_distributed_traced(ft, rank, mesh, rt, idx, val, mask, *,
-                               iters, seed, tol, backend, tracer) -> CPResult:
-    """Stepped Dynasor CP-ALS under an enabled tracer (see above)."""
+                               iters, seed, tol, backend, tracer,
+                               mgr=None, checkpoint_every: int = 1
+                               ) -> CPResult:
+    """Stepped Dynasor CP-ALS under an enabled tracer or resilience policy.
+
+    Per-mode jitted pieces (see :func:`make_instrumented_mode_fns`) give
+    every phase a real host-side call boundary — which is also what the
+    resilience layer needs: an active :func:`repro.resilience.use_policy`
+    scope makes the kernel dispatch walk the degradation ladder at trace
+    time, the remap call here gets host-level bounded retry, and every
+    solve escalation is counted. Checkpoints (``mgr``) persist the
+    factors *and* the remapped nonzero stream, so a resumed job
+    continues from the exact post-sweep state.
+    """
     factors = [jnp.asarray(f) for f in dist.init_factors(ft, rt, seed=seed)]
     lam = jnp.ones((rank,), jnp.float32)
     mttkrp_fns, remap_fns = make_instrumented_mode_fns(rt, mesh,
                                                        backend=backend)
     x_norm_sq = jnp.float32(np.sum(ft.tensor.values.astype(np.float64) ** 2))
-    grams = [f.T @ f for f in factors]
     fits: list[float] = []
-    for it in range(iters):
+    start_it = 0
+    if mgr is not None:
+        state, _step = _ckpt.restore_state(
+            mgr, _ckpt_state(rt, backend, factors, lam, fits, 0,
+                             idx, val, mask))
+        if state is not None:
+            factors = [jnp.asarray(f) for f in state["factors"]]
+            lam = jnp.asarray(state["lam"])
+            fits = [float(x) for x in state["fits"]]
+            idx = jnp.asarray(state["stream_idx"])
+            val = jnp.asarray(state["stream_val"])
+            mask = jnp.asarray(state["stream_mask"])
+            start_it = int(state["sweep"]) + 1
+    pol = _rpolicy.get_policy()
+    grams = [f.T @ f for f in factors]
+    for it in range(start_it, iters):
         with tracer.span("sweep", sweep=it, driver="distributed"):
             M = A = None
             for n in range(rt.nmodes):
                 with tracer.span("mode", mode=n):
                     with tracer.span("mttkrp", backend=backend):
-                        M = jax.block_until_ready(
-                            mttkrp_fns[n](idx, val, mask, *factors))
+                        def _mttkrp(n=n, idx=idx, val=val, mask=mask,
+                                    factors=tuple(factors)):
+                            return jax.block_until_ready(
+                                mttkrp_fns[n](idx, val, mask, *factors))
+                        M = (_mttkrp() if pol is None
+                             else pol.run("ops.kernel", _mttkrp))
+                        # Layout-pin: the eager solve/normalize below must
+                        # compute identically whether M arrived sharded
+                        # (mid-run) or from restored host factors (resume)
+                        # — reduction order follows layout, and resume
+                        # exactness is part of the checkpoint contract.
+                        M = jnp.asarray(np.asarray(M))
                     with tracer.span("solve"):
-                        A = _solve_v(grams, n, M)
+                        A, level = _solve_v_guarded(grams, n, M)
                         A, norms = _normalize_columns(A, it == 0)
                         A = jax.block_until_ready(A)
+                        level = int(level)
+                        if level:
+                            _obs.add("resilience.solve.guards",
+                                     level=_numerics.GUARD_LEVELS[level],
+                                     mode=n)
                     factors[n] = A
                     grams[n] = A.T @ A
                     lam = norms
                     with tracer.span("remap", transition=n):
-                        idx, val, mask = (jax.block_until_ready(
-                            remap_fns[n](idx, val, mask)))
+                        def _remap(n=n, idx=idx, val=val, mask=mask):
+                            return jax.block_until_ready(
+                                remap_fns[n](idx, val, mask))
+                        idx, val, mask = (
+                            _remap() if pol is None
+                            else pol.run("distributed.remap", _remap))
             fit = float(fit_from_parts(x_norm_sq, lam, grams, M, A))
         _obs.add("cpals.sweeps", driver="distributed")
         fits.append(fit)
+        if mgr is not None and (it + 1) % checkpoint_every == 0:
+            _ckpt.save_state(mgr, _ckpt_state(rt, backend, factors, lam,
+                                              fits, it, idx, val, mask))
         if it > 0 and abs(fits[-1] - fits[-2]) < tol:
             break
     nat = [dist.unpermute_factor(ft, rt, n, np.asarray(f))
@@ -308,7 +404,11 @@ def cp_als_distributed(ft: FlycooTensor, rank: int, mesh: Mesh, *,
                        tile_rows: int = 8, table=None,
                        gather_dtype: str = "float32",
                        ordering: str | None = None,
-                       tracer=None) -> CPResult:
+                       tracer=None,
+                       checkpoint_dir: str | None = None,
+                       checkpoint_every: int = 1,
+                       resilience: "_rpolicy.RetryPolicy | None" = None
+                       ) -> CPResult:
     """Distributed CP-ALS: FLYCOO layout + Dynasor sweeps on ``mesh``.
 
     Works for tensors of any order: with ``backend="pallas_fused"`` (or
@@ -332,6 +432,16 @@ def cp_als_distributed(ft: FlycooTensor, rank: int, mesh: Mesh, *,
     (:func:`make_instrumented_mode_fns`): per-mode jitted pieces with
     nested ``sweep → mode → mttkrp|solve|remap`` spans and identical
     counted metrics.
+
+    ``checkpoint_dir`` turns on resumable sweeps (atomic per-sweep
+    checkpoints holding factors, λ, fit trace, sweep index *and* the
+    remapped nonzero stream — a resumed job continues from the exact
+    post-sweep state; see ``repro.resilience.checkpoint``).
+    ``resilience`` (a ``repro.resilience.RetryPolicy``) turns on
+    graceful degradation: the run switches to the stepped driver and
+    every kernel dispatch / remap / chunk launch gets bounded retry and
+    a recorded walk down the residency ladder — every fallback counted
+    in the ``resilience.*`` namespace, never a silent wrong answer.
     """
     tracer = _tracer.get_tracer() if tracer is None else tracer
     rt, (idx, val, mask) = dist.prepare_runtime(ft, rank,
@@ -339,10 +449,20 @@ def cp_als_distributed(ft: FlycooTensor, rank: int, mesh: Mesh, *,
                                                 table=table,
                                                 gather_dtype=gather_dtype,
                                                 ordering=ordering)
-    if tracer.enabled:
-        return _cp_als_distributed_traced(
-            ft, rank, mesh, rt, idx, val, mask, iters=iters, seed=seed,
-            tol=tol, backend=backend, tracer=tracer)
+    mgr = _ckpt.make_manager(checkpoint_dir)
+    if tracer.enabled or resilience is not None or mgr is not None:
+        # The stepped driver is the resilient one: per-phase host call
+        # boundaries are where retry/degradation/checkpointing attach.
+        if resilience is None:
+            return _cp_als_distributed_traced(
+                ft, rank, mesh, rt, idx, val, mask, iters=iters, seed=seed,
+                tol=tol, backend=backend, tracer=tracer, mgr=mgr,
+                checkpoint_every=checkpoint_every)
+        with _rpolicy.use_policy(resilience):
+            return _cp_als_distributed_traced(
+                ft, rank, mesh, rt, idx, val, mask, iters=iters, seed=seed,
+                tol=tol, backend=backend, tracer=tracer, mgr=mgr,
+                checkpoint_every=checkpoint_every)
     factors = [jnp.asarray(f) for f in dist.init_factors(ft, rt, seed=seed)]
     lam = jnp.ones((rank,), jnp.float32)
     sweep = make_als_sweep(rt, mesh, backend=backend)

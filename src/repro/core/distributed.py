@@ -46,6 +46,7 @@ from . import remap as remap_lib
 from .flycoo import FlycooTensor, pack_mode
 from ..kernels.mttkrp import ops as kops
 from ..obs import counters as _obs
+from ..resilience import faults as _faults
 
 __all__ = [
     "AXIS",
@@ -334,6 +335,11 @@ def device_remap(idx, val, mask, next_mode: int, rt: DynasorRuntime):
 
     Returns ``(idx', val', mask', dropped)`` — the new owner-sorted layout.
     """
+    # Registered failure boundary (repro.resilience): the all_to_all is
+    # the one collective of the sweep — an interconnect hiccup lands
+    # here. Fires at trace time under jit; the stepped driver retries
+    # the whole remap call.
+    _faults.fault_site("distributed.remap")
     D = rt.num_workers
     cap = rt.bucket_cap_for((next_mode - 1) % rt.nmodes)
     dest = jnp.where(

@@ -248,6 +248,47 @@ def _build_mode(
     )
 
 
+def _validate_tensor(t: SparseTensor) -> None:
+    """Reject malformed input before any partitioning arithmetic runs.
+
+    FLYCOO preprocessing silently produced garbage on bad input: a
+    negative index made ``//`` round toward a nonexistent super-shard, an
+    out-of-range index scattered into another row's interval, and a
+    non-finite value poisoned every sweep's fit. Each case is a
+    ``ValueError`` naming the offending nonzero so the producer can fix
+    its extraction, not a crash (or worse, a wrong decomposition) three
+    layers down.
+    """
+    idx, vals = np.asarray(t.indices), np.asarray(t.values)
+    if idx.ndim != 2 or idx.shape[1] != len(t.shape):
+        raise ValueError(
+            f"indices must be (nnz, {len(t.shape)}) for shape {t.shape}, "
+            f"got {idx.shape}")
+    if vals.shape != (idx.shape[0],):
+        raise ValueError(
+            f"values must be ({idx.shape[0]},) to match indices, got "
+            f"{vals.shape}")
+    if idx.size:
+        for n, dim in enumerate(t.shape):
+            col = idx[:, n]
+            bad = np.flatnonzero((col < 0) | (col >= dim))
+            if bad.size:
+                b = int(bad[0])
+                raise ValueError(
+                    f"mode-{n} index out of range at nonzero {b}: index "
+                    f"{int(col[b])} not in [0, {dim}) — fix the extraction "
+                    f"or the declared shape {t.shape} ({bad.size} offending "
+                    "nonzeros total)")
+    if vals.size and not np.isfinite(vals).all():
+        bad = np.flatnonzero(~np.isfinite(vals))
+        b = int(bad[0])
+        raise ValueError(
+            f"non-finite value at nonzero {b}: {vals[b]!r} — a NaN/inf "
+            "nonzero poisons every CP-ALS sweep's MTTKRP and fit; drop or "
+            f"impute it before building FLYCOO ({bad.size} offending "
+            "nonzeros total)")
+
+
 def build_flycoo(
     t: SparseTensor,
     num_workers: int,
@@ -273,6 +314,7 @@ def build_flycoo(
     """
     from ..reorder import validate_ordering  # deferred: reorder imports kernels
     validate_ordering(ordering)
+    _validate_tensor(t)
     if params is None:
         params = choose_partition_params(
             t.shape, t.nnz, num_workers, rank=rank, cache_bytes=cache_bytes,
@@ -315,9 +357,14 @@ def pack_mode(
             ft.perm_indices[:, in_modes], ft.ordering,
             primaries=(owner.astype(np.int64),
                        ft.perm_indices[:, mode]),
+            max_rows=max(ft.params.num_workers * ft.modes[w].rows_cap
+                         for w in in_modes),
         )
     else:
-        key = owner.astype(np.int64) * (ft.perm_indices[:, mode].max() + 1) \
+        # max(initial=0) keeps the empty-tensor case (nnz == 0) a valid
+        # all-padding layout instead of a ValueError on .max().
+        key = owner.astype(np.int64) \
+            * (ft.perm_indices[:, mode].max(initial=0) + 1) \
             + ft.perm_indices[:, mode]
         order = np.argsort(key, kind="stable")
 

@@ -45,6 +45,8 @@ from ...oocore import planner as _planner
 # ``kernel`` (already initialized when this module loads), and we only
 # touch _reorder attributes at call time.
 from ...reorder import ordering as _reorder
+from ...resilience import faults as _faults
+from ...resilience import policy as _resilience
 
 __all__ = [
     "BACKENDS",
@@ -521,96 +523,118 @@ def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
         backend, nmodes=nmodes, rank=rank, blk=blk, tile_rows=tile_rows,
         factor_rows=tuple(factors[w].shape[0] for w in in_modes),
     )
-    if backend == "pallas_fused_bf16":
-        backend, gather_dtype = "pallas_fused", "bfloat16"
-    if backend == "pallas_fused_gather_bf16":
-        backend, gather_dtype = "pallas_fused_gather", "bfloat16"
-    local_row = (idx[:, mode] - row_offset).astype(jnp.int32)
-    local_row = jnp.where(valid, local_row, 0)
 
-    if backend in GATHER_BACKENDS + (STREAM_BACKEND, "pallas_fused",
-                                     "pallas_fused_tiled"):
-        gdt = jnp.bfloat16 if gather_dtype == "bfloat16" else jnp.float32
-        vals = jnp.where(valid, val, 0.0)
-        n_pad = n_pad_for(local_row.shape[0], rows_cap, blk, tile_rows)
-        idx_in = jnp.stack([idx[:, w] for w in in_modes], axis=1)
-        idx_in = jnp.where(valid[:, None], idx_in, 0).astype(jnp.int32)
-        order_keys = _reorder.locality_keys(idx_in, ordering)
-        slot, tile_of_block = build_block_layout(
-            local_row, valid, rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
-            order_keys=order_keys,
-        )
-        v_al = _align_to_blocks(vals, slot, n_pad)
-        r_al = _align_to_blocks(
-            (local_row % tile_rows).astype(jnp.int32), slot, n_pad
-        )
-        if backend in GATHER_BACKENDS + (STREAM_BACKEND,):
-            # In-kernel gather: no per-factor take, no _align_to_blocks
-            # of R-wide rows — only the int32 index stream is
-            # block-aligned, and the replicated factor matrices go to
-            # the kernel whole. Padding/invalid slots point at factor
-            # row 0 (in-bounds gather; their value is 0 so the
-            # contribution vanishes). Casting the resident matrices to
-            # the gather dtype is what halves both the VMEM residency
-            # and the factor-load traffic for bf16 (same values as the
-            # materialized path's cast-then-take).
-            idx_al = _align_to_blocks(idx_in, slot, n_pad)
-            fmats = tuple(pad_rank(factors[w].astype(gdt))
-                          for w in in_modes)
-            if backend == STREAM_BACKEND:
-                # Out-of-core: factors stay HBM-resident; the kernel
-                # streams FACTOR_ROW_TILE-row tiles through a bounded
-                # VMEM window, driven by the per-block tile schedule.
-                # Window widths are the planner's static correctness
-                # bound, so this path is jit-safe for any index data.
-                frow = _kernel.FACTOR_ROW_TILE
-                fmats = tuple(_pad_factor_rows(f, frow) for f in fmats)
-                scheds = tuple(
-                    tile_schedule(
-                        idx_al[:, i], blk,
-                        _planner.stream_window_tiles(blk, f.shape[0]))
-                    for i, f in enumerate(fmats))
-                out = _kernel.fused_mttkrp_nmode_gather_stream(
-                    v_al, idx_al, fmats, r_al, tile_of_block, scheds,
+    def _dispatch(backend: str, interpret, gather_dtype=gather_dtype):
+        if backend == "pallas_fused_bf16":
+            backend, gather_dtype = "pallas_fused", "bfloat16"
+        if backend == "pallas_fused_gather_bf16":
+            backend, gather_dtype = "pallas_fused_gather", "bfloat16"
+        local_row = (idx[:, mode] - row_offset).astype(jnp.int32)
+        local_row = jnp.where(valid, local_row, 0)
+
+        if backend in GATHER_BACKENDS + (STREAM_BACKEND, "pallas_fused",
+                                         "pallas_fused_tiled"):
+            gdt = jnp.bfloat16 if gather_dtype == "bfloat16" else jnp.float32
+            vals = jnp.where(valid, val, 0.0)
+            n_pad = n_pad_for(local_row.shape[0], rows_cap, blk, tile_rows)
+            idx_in = jnp.stack([idx[:, w] for w in in_modes], axis=1)
+            idx_in = jnp.where(valid[:, None], idx_in, 0).astype(jnp.int32)
+            # max_rows is static (factor shapes), so host-side sorts
+            # derive the identical Morton bit budget — and huge modes
+            # widen the key words instead of clamping tile ids.
+            order_keys = _reorder.locality_keys(
+                idx_in, ordering,
+                max_rows=max(factors[w].shape[0] for w in in_modes))
+            slot, tile_of_block = build_block_layout(
+                local_row, valid, rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
+                order_keys=order_keys,
+            )
+            v_al = _align_to_blocks(vals, slot, n_pad)
+            r_al = _align_to_blocks(
+                (local_row % tile_rows).astype(jnp.int32), slot, n_pad
+            )
+            if backend in GATHER_BACKENDS + (STREAM_BACKEND,):
+                # In-kernel gather: no per-factor take, no _align_to_blocks
+                # of R-wide rows — only the int32 index stream is
+                # block-aligned, and the replicated factor matrices go to
+                # the kernel whole. Padding/invalid slots point at factor
+                # row 0 (in-bounds gather; their value is 0 so the
+                # contribution vanishes). Casting the resident matrices to
+                # the gather dtype is what halves both the VMEM residency
+                # and the factor-load traffic for bf16 (same values as the
+                # materialized path's cast-then-take).
+                idx_al = _align_to_blocks(idx_in, slot, n_pad)
+                fmats = tuple(pad_rank(factors[w].astype(gdt))
+                              for w in in_modes)
+                if backend == STREAM_BACKEND:
+                    # Out-of-core: factors stay HBM-resident; the kernel
+                    # streams FACTOR_ROW_TILE-row tiles through a bounded
+                    # VMEM window, driven by the per-block tile schedule.
+                    # Window widths are the planner's static correctness
+                    # bound, so this path is jit-safe for any index data.
+                    frow = _kernel.FACTOR_ROW_TILE
+                    fmats = tuple(_pad_factor_rows(f, frow) for f in fmats)
+                    scheds = tuple(
+                        tile_schedule(
+                            idx_al[:, i], blk,
+                            _planner.stream_window_tiles(blk, f.shape[0]))
+                        for i, f in enumerate(fmats))
+                    out = _kernel.fused_mttkrp_nmode_gather_stream(
+                        v_al, idx_al, fmats, r_al, tile_of_block, scheds,
+                        rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
+                        interpret=interpret,
+                    )
+                    return out[:, :rank]
+                kern = (_kernel.fused_mttkrp_nmode_gather_tiled
+                        if backend == "pallas_fused_gather_tiled"
+                        else _kernel.fused_mttkrp_nmode_gather)
+                out = kern(
+                    v_al, idx_al, fmats, r_al, tile_of_block,
                     rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
                     interpret=interpret,
                 )
                 return out[:, :rank]
-            kern = (_kernel.fused_mttkrp_nmode_gather_tiled
-                    if backend == "pallas_fused_gather_tiled"
-                    else _kernel.fused_mttkrp_nmode_gather)
+            # Cast the factor *matrix* before the take so the gather itself
+            # moves gather_dtype-sized rows (the traffic the bf16 variant
+            # halves), not fp32 rows cast afterwards.
+            rows_al = tuple(
+                _align_to_blocks(
+                    pad_rank(jnp.take(factors[w].astype(gdt), idx[:, w], axis=0)),
+                    slot, n_pad
+                )
+                for w in in_modes
+            )
+            kern = (_kernel.fused_mttkrp_nmode_tiled
+                    if backend == "pallas_fused_tiled"
+                    else _kernel.fused_mttkrp_nmode)
             out = kern(
-                v_al, idx_al, fmats, r_al, tile_of_block,
+                v_al, rows_al, r_al, tile_of_block,
                 rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
                 interpret=interpret,
             )
             return out[:, :rank]
-        # Cast the factor *matrix* before the take so the gather itself
-        # moves gather_dtype-sized rows (the traffic the bf16 variant
-        # halves), not fp32 rows cast afterwards.
-        rows_al = tuple(
-            _align_to_blocks(
-                pad_rank(jnp.take(factors[w].astype(gdt), idx[:, w], axis=0)),
-                slot, n_pad
-            )
-            for w in in_modes
-        )
-        kern = (_kernel.fused_mttkrp_nmode_tiled
-                if backend == "pallas_fused_tiled"
-                else _kernel.fused_mttkrp_nmode)
-        out = kern(
-            v_al, rows_al, r_al, tile_of_block,
-            rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
-            interpret=interpret,
-        )
-        return out[:, :rank]
 
-    # Materialized path: contrib built in HBM, then blocked scatter.
-    ell = jnp.where(valid, val, 0.0)[:, None].astype(factors[0].dtype)
-    for w in in_modes:
-        ell = ell * jnp.take(factors[w], idx[:, w], axis=0)
-    use_ref = backend == "ref"
-    return mttkrp_blocked(
-        ell.astype(jnp.float32), local_row, valid, rows_cap=rows_cap,
-        blk=blk, tile_rows=tile_rows, interpret=interpret, use_ref=use_ref,
-    )
+        # Materialized path: contrib built in HBM, then blocked scatter.
+        ell = jnp.where(valid, val, 0.0)[:, None].astype(factors[0].dtype)
+        for w in in_modes:
+            ell = ell * jnp.take(factors[w], idx[:, w], axis=0)
+        use_ref = backend == "ref"
+        return mttkrp_blocked(
+            ell.astype(jnp.float32), local_row, valid, rows_cap=rows_cap,
+            blk=blk, tile_rows=tile_rows, interpret=interpret, use_ref=use_ref,
+        )
+
+    def _attempt(backend: str, interpret):
+        # Registered failure boundary (repro.resilience): this is
+        # where lowering failures and VMEM OOM surface (at trace
+        # time under jit — a fault here aborts the trace, leaving
+        # no cache entry, so a retry re-dispatches for real).
+        _faults.fault_site("ops.kernel")
+        return _dispatch(backend, interpret)
+
+    pol = _resilience.get_policy()
+    if pol is None:
+        # No active policy: fail fast — exactly the pre-resilience
+        # dispatch, one attempt at the selected backend.
+        return _attempt(backend, interpret)
+    return pol.dispatch(_attempt, backend, interpret)

@@ -13,7 +13,9 @@ file, which makes the change reviewable instead of silent).
 
 What the gate covers (:data:`COUNTED_PREFIXES`): ``cpals.*``,
 ``dispatch.*``, ``oocore.*``, ``planner.*``, ``remap.*``,
-``reorder.*``. Wall-time
+``reorder.*``, ``resilience.*`` (the fault-free run pins every
+``site_calls`` count — a hook that silently stops firing, or a
+fallback that fires with no fault injected, lands here). Wall-time
 counters (``*_s`` suffixed) and ``execution.*`` / ``serve.*`` /
 ``dryrun.*`` / ``tune.*`` events are host- or config-dependent and are
 filtered out before comparison.
@@ -56,7 +58,7 @@ BASELINE_PATH = os.path.join(_REPO_ROOT, "experiments", "obs",
 # Base-name prefixes whose counters are host-independent (counted, not
 # timed) and therefore eligible for the committed baseline.
 COUNTED_PREFIXES = ("cpals.", "dispatch.", "oocore.", "planner.", "remap.",
-                    "reorder.")
+                    "reorder.", "resilience.")
 
 # The pinned workload configuration — recorded in the artifact's meta so
 # a baseline mismatch can be reproduced byte-for-byte.

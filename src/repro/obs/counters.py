@@ -79,6 +79,15 @@ NAMESPACES = (
     "reorder.dma.presort_distinct_bytes",
     "reorder.dma.presort_scheduled_bytes",
     "reorder.perms",
+    "resilience.checkpoint.restores",
+    "resilience.checkpoint.saves",
+    "resilience.degradations",
+    "resilience.injected",
+    "resilience.interpret_fallbacks",
+    "resilience.retries",
+    "resilience.site_calls",
+    "resilience.solve.guards",
+    "resilience.table_fallbacks",
     "serve.decode_s",
     "serve.prefill_s",
     "serve.tokens",

@@ -35,6 +35,8 @@ from ..kernels.mttkrp import ops as _ops
 from ..obs import counters as _obs
 from ..obs import tracer as _tracer_mod
 from ..reorder import ordering as _reorder
+from ..resilience import faults as _faults
+from ..resilience import policy as _resilience
 from . import planner as _planner
 
 __all__ = [
@@ -208,7 +210,8 @@ def mttkrp_out_of_core(
         presort_distinct_b = pre.distinct_tile_bytes
         idx, val, valid, _ = _reorder.reorder_stream(
             idx, val, valid, mode=mode, ordering=ordering,
-            tile_rows=tile_rows, row_offset=int(row_offset))
+            tile_rows=tile_rows, row_offset=int(row_offset),
+            max_rows=max(int(factors[w].shape[0]) for w in in_modes))
     idx = jnp.asarray(idx)
     val = jnp.asarray(val)
     valid = jnp.asarray(valid)
@@ -284,13 +287,23 @@ def mttkrp_out_of_core(
             cw = cwindows[ci]
             with tracer.span("oocore.chunk", chunk=ci,
                              blocks=stop - start):
-                out = _kernel.fused_mttkrp_nmode_gather_stream(
-                    v_al[sl], idx_al[sl], fmats, r_al[sl],
-                    tile_of_block[start:stop],
-                    tuple(s[start:stop, :cw[i]]
-                          for i, s in enumerate(scheds)),
-                    rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
-                    interpret=interpret, out_init=out)
+                def _launch(out=out, sl=sl, start=start, stop=stop, cw=cw):
+                    # Registered failure boundary (repro.resilience):
+                    # one chunk = one bounded DMA window + kernel
+                    # launch — the unit a transient blip costs, and
+                    # the unit the retry policy replays.
+                    _faults.fault_site("oocore.chunk")
+                    return _kernel.fused_mttkrp_nmode_gather_stream(
+                        v_al[sl], idx_al[sl], fmats, r_al[sl],
+                        tile_of_block[start:stop],
+                        tuple(s[start:stop, :cw[i]]
+                              for i, s in enumerate(scheds)),
+                        rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
+                        interpret=interpret, out_init=out)
+
+                pol = _resilience.get_policy()
+                out = (_launch() if pol is None
+                       else pol.run("oocore.chunk", _launch))
                 if tracer.enabled:
                     out = out.block_until_ready()
 

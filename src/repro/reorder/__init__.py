@@ -18,6 +18,7 @@ from .ordering import (
     ORDERINGS,
     locality_keys,
     locality_lexsort,
+    morton_bits_for,
     morton_key_words,
     reorder_stream,
     validate_ordering,
@@ -28,6 +29,7 @@ __all__ = [
     "ORDERINGS",
     "locality_keys",
     "locality_lexsort",
+    "morton_bits_for",
     "morton_key_words",
     "reorder_stream",
     "validate_ordering",

@@ -50,6 +50,7 @@ __all__ = [
     "ORDERINGS",
     "locality_keys",
     "locality_lexsort",
+    "morton_bits_for",
     "morton_key_words",
     "reorder_stream",
     "validate_ordering",
@@ -62,9 +63,13 @@ FACTOR_ROW_TILE = _kernel.FACTOR_ROW_TILE
 ORDERINGS = ("none", "tile", "morton")
 
 # Bits of tile id each mode contributes to the Morton code: 16 bits =
-# 65536 FACTOR_ROW_TILE-row tiles = 8.4M factor rows per mode. Tile ids
-# beyond that clamp (ordering quality degrades gracefully; the
-# permutation stays a bijection regardless).
+# 65536 FACTOR_ROW_TILE-row tiles = 8.4M factor rows per mode. Callers
+# that know the mode sizes (``max_rows=`` threading from ops /
+# oocore / pack_mode) widen past this automatically via
+# :func:`morton_bits_for`; without that knowledge an id beyond the
+# budget raises host-side rather than silently clamping (a clamp
+# merges distinct tiles into one key — the ordering quietly stops
+# doing its job exactly on the huge tensors it exists for).
 MORTON_BITS = 16
 
 # jax runs with x64 disabled (int32 default), so interleaved codes are
@@ -80,7 +85,22 @@ def validate_ordering(ordering: str) -> str:
     return ordering
 
 
-def morton_key_words(tiles, bits: int = MORTON_BITS):
+def morton_bits_for(max_tiles: int, bits: int = MORTON_BITS) -> int:
+    """Bits per mode covering tile ids ``[0, max_tiles)``.
+
+    Never below ``bits`` (key-layout stability for the common case),
+    widened when the mode is bigger — the word packing grows with it,
+    so no tile id is ever truncated. Widening only prepends zero bit
+    planes for ids that fit anyway, so it never changes the sort order
+    of in-budget keys.
+    """
+    if max_tiles <= 1:
+        return bits
+    return max(bits, int(max_tiles - 1).bit_length())
+
+
+def morton_key_words(tiles, bits: int = MORTON_BITS, *,
+                     max_tiles: int | None = None):
     """Morton (Z-order) code of per-mode tile ids, as int32-safe words.
 
     ``tiles`` is ``(n, K)`` — one tile id per gathered mode. The K
@@ -89,8 +109,25 @@ def morton_key_words(tiles, bits: int = MORTON_BITS):
     most 30 bits. Returns a tuple of words, **most significant first** —
     the comparison order ``lexsort`` needs. Works on numpy and
     ``jax.numpy`` arrays alike (operator arithmetic only).
+
+    ``max_tiles`` (static: the largest gathered mode's tile count)
+    widens ``bits`` via :func:`morton_bits_for` so big modes never
+    truncate — jit callers must pass it (tracers carry no values to
+    check). Without it, a host-side id beyond the ``bits`` budget is a
+    ``ValueError``: distinct tiles silently merging into one clamped
+    key is precisely the failure mode this module exists to avoid.
     """
     k = tiles.shape[1]
+    if max_tiles is not None:
+        bits = morton_bits_for(int(max_tiles), bits)
+    elif isinstance(tiles, np.ndarray) and tiles.size:
+        top = int(tiles.max())
+        if top >= (1 << bits):
+            raise ValueError(
+                f"tile id {top} needs {top.bit_length()} bits, over the "
+                f"{bits}-bit Morton budget — pass max_tiles= (or "
+                "max_rows= one level up) so the word count widens "
+                "instead of silently clamping distinct tiles together")
     tiles = tiles.clip(0, (1 << bits) - 1)
     planes = [(tiles[:, i] >> b) & 1
               for b in reversed(range(bits)) for i in range(k)]
@@ -104,7 +141,8 @@ def morton_key_words(tiles, bits: int = MORTON_BITS):
 
 
 def locality_keys(idx_in, ordering: str,
-                  frow_tile: int = FACTOR_ROW_TILE):
+                  frow_tile: int = FACTOR_ROW_TILE,
+                  max_rows: int | None = None):
     """Sort keys realizing ``ordering`` over gathered-mode indices.
 
     ``idx_in`` is ``(n, K)`` — the factor-row index of each nonzero in
@@ -112,6 +150,11 @@ def locality_keys(idx_in, ordering: str,
     arrays, most significant first (``()`` for ``"none"``). Generic
     over numpy / ``jax.numpy`` inputs; the jit consumer is
     ``ops.build_block_layout(order_keys=...)``.
+
+    ``max_rows`` (static: the largest gathered mode's factor row
+    count) sizes the Morton bit budget — see :func:`morton_key_words`.
+    Host and jit callers must agree on it for bit-identical keys (they
+    derive it from the same factor shapes, so they do).
     """
     validate_ordering(ordering)
     if ordering == "none":
@@ -119,11 +162,14 @@ def locality_keys(idx_in, ordering: str,
     tiles = idx_in // frow_tile
     if ordering == "tile":
         return tuple(tiles[:, i] for i in range(tiles.shape[1]))
-    return morton_key_words(tiles)
+    max_tiles = (None if max_rows is None
+                 else -(-int(max_rows) // frow_tile))
+    return morton_key_words(tiles, max_tiles=max_tiles)
 
 
 def locality_lexsort(idx_in, ordering: str, *, primaries=(),
-                     frow_tile: int = FACTOR_ROW_TILE) -> np.ndarray:
+                     frow_tile: int = FACTOR_ROW_TILE,
+                     max_rows: int | None = None) -> np.ndarray:
     """Host-side stable permutation: primaries, then locality, then position.
 
     ``primaries`` are given most significant first (e.g. the output-tile
@@ -133,7 +179,8 @@ def locality_lexsort(idx_in, ordering: str, *, primaries=(),
     degenerates to a stable sort by ``primaries`` alone.
     """
     idx_in = np.asarray(idx_in)
-    keys = locality_keys(idx_in, ordering, frow_tile=frow_tile)
+    keys = locality_keys(idx_in, ordering, frow_tile=frow_tile,
+                         max_rows=max_rows)
     seq = ((np.arange(idx_in.shape[0]),)
            + tuple(reversed(keys))
            + tuple(reversed([np.asarray(p) for p in primaries])))
@@ -145,7 +192,8 @@ def locality_lexsort(idx_in, ordering: str, *, primaries=(),
 
 def reorder_stream(idx, val, valid, *, mode: int, ordering: str,
                    tile_rows: int, row_offset: int = 0,
-                   frow_tile: int = FACTOR_ROW_TILE):
+                   frow_tile: int = FACTOR_ROW_TILE,
+                   max_rows: int | None = None):
     """Permute one mode's nonzero stream for factor-tile locality.
 
     Input contract = the executor's (``oocore.mttkrp_out_of_core``):
@@ -166,5 +214,5 @@ def reorder_stream(idx, val, valid, *, mode: int, ordering: str,
     out_tile = np.where(valid, local_row // tile_rows, np.int64(2 ** 62))
     idx_in = np.where(valid[:, None], idx[:, in_modes], 0)
     perm = locality_lexsort(idx_in, ordering, primaries=(out_tile,),
-                            frow_tile=frow_tile)
+                            frow_tile=frow_tile, max_rows=max_rows)
     return idx[perm], val[perm], valid[perm], perm

@@ -1,0 +1,67 @@
+"""``repro.resilience`` — fault injection, graceful degradation, resume.
+
+Three pieces, one contract (**never a silent wrong answer, never an
+uncounted fallback**):
+
+* :mod:`~repro.resilience.faults` — a closed registry of the stack's
+  real failure boundaries (:data:`~repro.resilience.faults.SITES`) with
+  deterministic, seeded fault injection for bit-reproducible chaos runs;
+* :mod:`~repro.resilience.policy` — bounded retry with backoff for
+  transient faults, and a recorded walk *down* the existing residency
+  ladder (plus compiled → interpret) for resource/lowering faults;
+* :mod:`~repro.resilience.checkpoint` + guarded numerics
+  (:mod:`~repro.resilience.numerics`) — resumable CP-ALS sweeps through
+  the atomic ``CheckpointManager``, and an escalating-ridge/lstsq solve
+  guard.
+
+``python -m repro.resilience`` is the seeded chaos smoke CI runs. The
+fault taxonomy, injection-site table, and degradation diagram live in
+``docs/resilience.md``.
+"""
+from .checkpoint import make_manager, make_state, restore_state, save_state
+from .faults import (
+    SITES,
+    CorruptionFault,
+    FaultInjector,
+    FaultSpec,
+    InjectedFault,
+    ResourceFault,
+    TransientFault,
+    fault_site,
+    inject,
+    seeded_schedule,
+)
+from .numerics import GUARD_LEVELS, guarded_solve
+from .policy import (
+    DEGRADATION_LADDER,
+    ResilienceExhausted,
+    RetryPolicy,
+    get_policy,
+    next_rung,
+    use_policy,
+)
+
+__all__ = [
+    "DEGRADATION_LADDER",
+    "GUARD_LEVELS",
+    "SITES",
+    "CorruptionFault",
+    "FaultInjector",
+    "FaultSpec",
+    "InjectedFault",
+    "ResilienceExhausted",
+    "ResourceFault",
+    "RetryPolicy",
+    "TransientFault",
+    "fault_site",
+    "get_policy",
+    "guarded_solve",
+    "inject",
+    "make_manager",
+    "make_state",
+    "next_rung",
+    "restore_state",
+    "save_state",
+    "seeded_schedule",
+    "use_policy",
+]

@@ -1,0 +1,259 @@
+"""Deterministic, seeded fault injection at the stack's failure boundaries.
+
+A production decomposition dies in a handful of well-defined places: the
+kernel call can fail to lower or OOM VMEM (``ops.mttkrp_device_step``),
+a per-chunk factor-tile DMA can hiccup (``oocore.executor``), the remap
+``all_to_all`` can drop a link (``core.distributed``), a calibration
+table on disk can be corrupt (``tune.table``), and the execution-mode
+resolution can discover mid-job that the compiled path is gone
+(``runtime.execution``). Each of those boundaries calls
+:func:`fault_site` with its registered site name. Normally that is a
+counted no-op; inside an :func:`inject` block the active
+:class:`FaultInjector` raises a *typed* fault when the site's call
+index matches its schedule.
+
+Design rules, mirroring ``repro.obs``:
+
+* **Closed site registry.** :data:`SITES` is the complete list; an
+  unregistered name raises ``ValueError`` at the call site, so the
+  injection-site table in ``docs/resilience.md`` cannot silently rot.
+* **Seeded, bit-reproducible schedules.** :func:`seeded_schedule` maps
+  ``(seed, sites, horizon)`` to a fixed tuple of :class:`FaultSpec`
+  via ``np.random.default_rng`` — the chaos CI run replays the exact
+  same faults on every host.
+* **Typed faults.** :class:`TransientFault` (retry-able — interconnect
+  hiccup, preempted DMA), :class:`ResourceFault` (not retry-able at the
+  same rung — VMEM OOM, failed lowering; the policy steps *down* the
+  residency ladder), :class:`CorruptionFault` (bad bytes — never
+  retried, never degraded through: the consumer must discard the
+  artifact or abort). The degradation policy in
+  :mod:`repro.resilience.policy` dispatches on these types.
+* **Counted, never silent.** Every injection lands in the
+  ``resilience.injected`` counter (site + kind labels); every site call
+  in ``resilience.site_calls`` — the chaos gate asserts
+  injected == handled so no fault can vanish into a retry loop
+  unaccounted.
+
+The hooks are host-side Python: for code that runs under ``jax.jit``
+(the kernel dispatch, the remap) they fire at *trace* time, which is
+exactly where real lowering/OOM failures surface — and a fault that
+aborts a trace leaves no cache entry, so a retry re-traces and the
+site's call counter advances deterministically.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+from ..obs import counters as _obs
+
+__all__ = [
+    "SITES",
+    "FAULT_KINDS",
+    "InjectedFault",
+    "TransientFault",
+    "ResourceFault",
+    "CorruptionFault",
+    "FaultSpec",
+    "FaultInjector",
+    "active_injector",
+    "fault_site",
+    "inject",
+    "seeded_schedule",
+]
+
+# The closed injection-site registry — every fault_site() caller in the
+# stack, one name per failure boundary. Keep sorted; the table in
+# docs/resilience.md mirrors this tuple.
+SITES = (
+    "distributed.remap",     # core.distributed.device_remap — the all_to_all
+    "execution.resolve",     # runtime.execution.resolve_interpret
+    "oocore.chunk",          # oocore.executor — per-chunk DMA + kernel call
+    "ops.kernel",            # kernels.mttkrp.ops.mttkrp_device_step dispatch
+    "tune.table_load",       # tune.table — calibration table read/parse
+)
+_SITE_SET = frozenset(SITES)
+
+
+class InjectedFault(RuntimeError):
+    """Base of all injected faults; carries the site and call index."""
+
+    kind = "injected"
+
+    def __init__(self, site: str, index: int, note: str = ""):
+        self.site = site
+        self.index = index
+        super().__init__(
+            f"injected {self.kind} fault at site {site!r} (call #{index})"
+            + (f": {note}" if note else ""))
+
+
+class TransientFault(InjectedFault):
+    """Retry-able blip (interconnect hiccup, preempted DMA)."""
+
+    kind = "transient"
+
+
+class ResourceFault(InjectedFault):
+    """Out of resource at this rung (VMEM OOM, lowering failure) —
+    retrying identically cannot succeed; step down the residency ladder."""
+
+    kind = "resource"
+
+
+class CorruptionFault(InjectedFault):
+    """Bad bytes (truncated/garbled artifact) — never retried, never
+    degraded through; the consumer discards the artifact or aborts."""
+
+    kind = "corruption"
+
+
+FAULT_KINDS = {
+    "transient": TransientFault,
+    "resource": ResourceFault,
+    "corruption": CorruptionFault,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault: the ``index``-th call to ``site`` raises ``kind``."""
+
+    site: str
+    index: int
+    kind: str
+
+    def __post_init__(self):
+        if self.site not in _SITE_SET:
+            raise ValueError(
+                f"unknown fault site {self.site!r}: expected one of {SITES}")
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}: expected one of "
+                f"{tuple(FAULT_KINDS)}")
+        if self.index < 0:
+            raise ValueError(f"fault index must be >= 0, got {self.index}")
+
+
+# The kind each site defaults to in a seeded schedule — the failure
+# mode that boundary realistically produces.
+_DEFAULT_KIND = {
+    "distributed.remap": "transient",
+    "execution.resolve": "resource",
+    "oocore.chunk": "transient",
+    "ops.kernel": "resource",
+    "tune.table_load": "corruption",
+}
+
+
+def seeded_schedule(seed: int, *, sites=SITES, per_site: int = 1,
+                    horizon: int = 3,
+                    kinds: dict | None = None) -> tuple[FaultSpec, ...]:
+    """Deterministic schedule: ``per_site`` faults per site from ``seed``.
+
+    Call indices are drawn without replacement from ``[0, horizon)`` by
+    ``np.random.default_rng(seed)`` — bit-reproducible across hosts and
+    runs, which is what lets CI pin the chaos run's counter totals.
+    ``kinds`` overrides the per-site default fault kind.
+    """
+    import numpy as np
+
+    kinds = dict(_DEFAULT_KIND, **(kinds or {}))
+    rng = np.random.default_rng(seed)
+    specs = []
+    for site in sites:
+        take = min(per_site, horizon)
+        for i in sorted(rng.choice(horizon, size=take, replace=False)):
+            specs.append(FaultSpec(site=site, index=int(i), kind=kinds[site]))
+    return tuple(specs)
+
+
+class FaultInjector:
+    """Replays a fault schedule against the stack's site hooks.
+
+    Thread-safe per-site call counters; each spec fires exactly once
+    (the site's counter advances on every call, so a retried call gets
+    a fresh index and passes). ``injected`` records what actually fired,
+    for the chaos gate's injected-vs-handled accounting.
+    """
+
+    def __init__(self, specs: tuple[FaultSpec, ...] = ()):
+        self._lock = threading.Lock()
+        self._sched: dict[str, dict[int, str]] = {}
+        for s in specs:
+            if isinstance(s, (tuple, list)):
+                s = FaultSpec(*s)
+            dup = self._sched.setdefault(s.site, {}).setdefault(
+                s.index, s.kind)
+            if dup != s.kind:
+                raise ValueError(
+                    f"conflicting specs for {s.site!r} call #{s.index}: "
+                    f"{dup} vs {s.kind}")
+        self.specs = tuple(specs)
+        self.calls: dict[str, int] = {}
+        self.injected: list[FaultSpec] = []
+
+    def on_call(self, site: str) -> None:
+        with self._lock:
+            i = self.calls.get(site, 0)
+            self.calls[site] = i + 1
+            kind = self._sched.get(site, {}).get(i)
+        if kind is not None:
+            spec = FaultSpec(site=site, index=i, kind=kind)
+            self.injected.append(spec)
+            _obs.add("resilience.injected", site=site, kind=kind)
+            raise FAULT_KINDS[kind](site, i)
+
+    def pending(self) -> tuple[FaultSpec, ...]:
+        """Scheduled faults that have not fired (site not called enough)."""
+        fired = set(self.injected)
+        return tuple(FaultSpec(site, i, kind)
+                     for site, by_idx in self._sched.items()
+                     for i, kind in by_idx.items()
+                     if FaultSpec(site, i, kind) not in fired)
+
+
+_active: FaultInjector | None = None
+
+
+def active_injector() -> FaultInjector | None:
+    return _active
+
+
+@contextlib.contextmanager
+def inject(specs_or_injector):
+    """Activate fault injection for the block; restores on exit.
+
+    Accepts a :class:`FaultInjector` or an iterable of
+    :class:`FaultSpec`. Yields the injector so callers can assert on
+    ``injected`` / ``pending()`` afterwards. Nesting replaces the outer
+    injector for the inner block (sites see one injector at a time).
+    """
+    global _active
+    inj = (specs_or_injector if isinstance(specs_or_injector, FaultInjector)
+           else FaultInjector(tuple(specs_or_injector)))
+    previous = _active
+    _active = inj
+    try:
+        yield inj
+    finally:
+        _active = previous
+
+
+def fault_site(site: str) -> None:
+    """The stack-side hook: count the call, raise if scheduled.
+
+    A no-op (plus one counter bump) when no injector is active — the
+    production path pays a dict update per *host-level* call (kernel
+    dispatch and remap hooks fire at jit-trace time, once per compiled
+    signature; the chunk hook once per chunk), never per nonzero.
+    """
+    if site not in _SITE_SET:
+        raise ValueError(
+            f"unknown fault site {site!r}: expected one of {SITES} — "
+            "register new failure boundaries in repro.resilience.faults."
+            "SITES and document them in docs/resilience.md")
+    _obs.add("resilience.site_calls", site=site)
+    if _active is not None:
+        _active.on_call(site)

@@ -1,0 +1,80 @@
+"""Numerical guards for the CP-ALS normal-equations solve.
+
+``A_n <- M_n V^+`` with ``V = Hadamard of the other modes' grams`` is the
+one numerically fragile step of CP-ALS: a non-finite MTTKRP output (bad
+input values), a collapsed factor column, or two nearly-parallel factor
+columns make ``V`` singular and the plain ``linalg.solve`` emits
+inf/NaN that silently poisons every later sweep. :func:`guarded_solve`
+is the jit-safe escalation ladder:
+
+  0. **clean** — the production path: ``solve(V + ridge·I)`` with the
+     tiny baseline ridge, exactly what the unguarded solve computed;
+  1. **ridge** — non-finite input/solution or a degenerate gram
+     diagonal: re-solve with an escalated, scale-aware ridge
+     (``escalated_scale · max|diag V|``);
+  2. **lstsq** — still non-finite: minimum-norm least squares via the
+     SVD pseudo-inverse, with non-finite inputs zeroed first.
+
+The guard level is returned next to the solution so host-side drivers
+can count every escalation (``resilience.solve.guards{level=...}`` —
+never a silent fallback); the escalated branches live under
+``lax.cond`` so a healthy solve never pays the SVD. Levels 1–2 cannot
+trigger on finite, well-conditioned inputs — the guarded solve is
+bit-identical to the unguarded one on every healthy run (pinned by
+``tests/test_resilience.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["GUARD_LEVELS", "guarded_solve"]
+
+# Index == the int32 level guarded_solve returns.
+GUARD_LEVELS = ("clean", "ridge", "lstsq")
+
+
+def guarded_solve(V, M, *, ridge: float = 1e-9,
+                  escalated_scale: float = 1e-6,
+                  diag_rtol: float = 1e-12):
+    """Solve ``X Vᵀ = M`` (V symmetric) with escalating regularization.
+
+    Returns ``(X, level)`` — ``X`` is ``M @ inv(V)`` shaped like ``M``,
+    ``level`` an int32 scalar indexing :data:`GUARD_LEVELS`. Jit-safe
+    (``lax.cond`` escalation, no data-dependent Python branching), so it
+    runs identically inside the fused ``shard_map`` sweep and eagerly in
+    the stepped driver.
+    """
+    R = V.shape[0]
+    eye = jnp.eye(R, dtype=M.dtype)
+    finite_in = jnp.isfinite(V).all() & jnp.isfinite(M).all()
+    Vc = jnp.where(jnp.isfinite(V), V, 0.0)
+    Mc = jnp.where(jnp.isfinite(M), M, 0.0)
+    d = jnp.diagonal(Vc)
+    scale = jnp.maximum(jnp.max(jnp.abs(d)), 1.0)
+    # V is a Hadamard product of PSD grams: a ~zero diagonal entry means
+    # a collapsed factor column — the cheap, conservative ill-condition
+    # signal (no SVD on the hot path).
+    illcond = jnp.min(d) <= diag_rtol * scale
+
+    X0 = jnp.linalg.solve(Vc + ridge * eye, Mc.T).T
+    clean = finite_in & ~illcond & jnp.isfinite(X0).all()
+
+    def _take_clean(_):
+        return X0, jnp.int32(0)
+
+    def _escalate(_):
+        X1 = jnp.linalg.solve(Vc + escalated_scale * scale * eye, Mc.T).T
+
+        def _take_ridge(_):
+            return X1, jnp.int32(1)
+
+        def _lstsq(_):
+            # Minimum-norm least squares (SVD pinv) — always finite.
+            X2 = (jnp.linalg.pinv(Vc, rtol=1e-10) @ Mc.T).T
+            return jnp.where(jnp.isfinite(X2), X2, 0.0), jnp.int32(2)
+
+        return jax.lax.cond(jnp.isfinite(X1).all(), _take_ridge, _lstsq,
+                            None)
+
+    return jax.lax.cond(clean, _take_clean, _escalate, None)

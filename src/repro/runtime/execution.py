@@ -37,6 +37,7 @@ import dataclasses
 import logging
 
 from ..obs import counters as _obs
+from ..resilience import faults as _faults
 
 __all__ = [
     "EXECUTION_MODES",
@@ -155,6 +156,11 @@ def resolve_interpret(override: bool | None = None,
     global _fallback_logged
     if override is not None:
         return bool(override)
+    # Registered failure boundary (repro.resilience): resolution can
+    # discover mid-job that the compiled path is gone. The hook sits
+    # after the override check so a degradation policy's explicit
+    # ``interpret=True`` fallback bypasses the faulty resolution.
+    _faults.fault_site("execution.resolve")
     if mode is None:
         mode = _mode
     if mode not in EXECUTION_MODES:

@@ -23,6 +23,7 @@ import time
 from typing import Any, Callable, Iterator
 
 from ..checkpoint import CheckpointManager
+from ..obs import counters as _obs
 
 __all__ = ["StragglerMonitor", "TrainLoopRunner"]
 
@@ -92,6 +93,7 @@ class TrainLoopRunner:
                     raise FloatingPointError(f"NaN loss at step {step}")
             except Exception as e:          # noqa: BLE001 — retry path
                 retries += 1
+                _obs.add("resilience.retries", site="train_step")
                 self.log(f"[runner] step {step} failed ({e!r}); "
                          f"retry {retries}/{self.max_retries}")
                 if retries > self.max_retries:
@@ -109,10 +111,12 @@ class TrainLoopRunner:
                          f"{dt*1e3:.1f} ms")
             if self.ckpt_every and step and step % self.ckpt_every == 0:
                 self.ckpt.save(step, state)
+                _obs.add("resilience.checkpoint.saves")
                 last_good = state
                 retries = 0
             step += 1
         if self._preempted:
             self.log(f"[runner] SIGTERM — checkpointing step {step}")
             self.ckpt.save(step, state)
+            _obs.add("resilience.checkpoint.saves")
         return state, history

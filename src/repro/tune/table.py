@@ -47,6 +47,8 @@ import platform
 from typing import Iterable, Sequence
 
 from ..kernels.mttkrp import ops as _kops
+from ..obs import counters as _obs
+from ..resilience import faults as _faults
 
 __all__ = [
     "SCHEMA_VERSION",
@@ -230,6 +232,11 @@ class CalibrationTable:
 
     @classmethod
     def load(cls, path: str) -> "CalibrationTable":
+        # Registered failure boundary (repro.resilience): a table on
+        # disk can be truncated or garbled — the injected
+        # CorruptionFault stands in for exactly what from_json's parse
+        # errors signal on real bad bytes.
+        _faults.fault_site("tune.table_load")
         with open(path) as f:
             return cls.from_json(json.load(f))
 
@@ -336,8 +343,14 @@ def find_table(table_dir: str = DEFAULT_TABLE_DIR, *,
     for path in paths:
         try:
             table = CalibrationTable.load(path)
+        except _faults.CorruptionFault:
+            # Injected bad bytes: skip the table exactly like a real
+            # parse failure — counted, never silently steering dispatch.
+            _obs.add("resilience.table_fallbacks", reason="corrupt")
+            continue
         except (SchemaVersionError, json.JSONDecodeError, KeyError,
                 ValueError, OSError):
+            _obs.add("resilience.table_fallbacks", reason="unloadable")
             continue
         if table.meta.get("stub"):
             continue

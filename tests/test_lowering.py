@@ -222,7 +222,13 @@ def test_no_interpret_true_hardcode_outside_policy():
     explicitly on purpose (they compare both forms). Everything else
     must defer to the policy — that is the whole point of the refactor.
     """
-    allowed = {os.path.join("src", "repro", "runtime", "execution.py")}
+    allowed = {
+        os.path.join("src", "repro", "runtime", "execution.py"),
+        # The degradation policy's recorded compiled -> interpret
+        # fallback (counted resilience.interpret_fallbacks) is the one
+        # other legitimate place the flip is spelled out.
+        os.path.join("src", "repro", "resilience", "policy.py"),
+    }
     pattern = re.compile(r"interpret\s*=\s*True")
     offenders = []
     for top in ("src", "benchmarks"):

@@ -43,6 +43,7 @@ from repro.reorder.ordering import (
     ORDERINGS,
     locality_keys,
     locality_lexsort,
+    morton_bits_for,
     morton_key_words,
     reorder_stream,
     validate_ordering,
@@ -485,3 +486,74 @@ def test_cpals_fit_invariant_under_reordering_subprocess():
     out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
                          capture_output=True, text=True, timeout=1200)
     assert "REORDER-CPALS-OK" in out.stdout, out.stdout + out.stderr
+
+
+# ---------------------------------------------------------------------------
+# Morton overflow guard (PR-9): widen, never silently clamp
+# ---------------------------------------------------------------------------
+
+def test_morton_bits_for_widens_past_budget():
+    assert morton_bits_for(1) == 16
+    assert morton_bits_for(1 << 16) == 16          # exactly at the budget
+    assert morton_bits_for((1 << 16) + 1) == 17    # one past → widened
+    assert morton_bits_for(1 << 20) == 20
+    assert morton_bits_for(3, bits=2) == 2
+    assert morton_bits_for(5, bits=2) == 3
+
+
+def test_morton_keys_at_exact_bit_limit():
+    # the largest in-budget id (2^16 - 1) needs no widening and no error
+    top = (1 << 16) - 1
+    tiles = np.array([[top, 0], [0, top], [top, top]], np.int64)
+    words = morton_key_words(tiles)
+    assert len(words) == -(-16 * 2 // 30)
+    # distinct inputs keep distinct keys at the boundary
+    stacked = np.stack(words, axis=1)
+    assert len({tuple(r) for r in stacked}) == 3
+
+
+def test_morton_overflow_raises_without_max_tiles():
+    tiles = np.array([[1 << 16, 0]], np.int64)     # one past the budget
+    with pytest.raises(ValueError, match="Morton budget"):
+        morton_key_words(tiles)
+    # empty input never raises (nothing to truncate)
+    morton_key_words(np.zeros((0, 2), np.int64))
+
+
+def test_morton_widening_preserves_order_and_distinguishes_big_ids():
+    # ids above 2^16: with max_tiles the budget widens and distant ids
+    # stay distinct; componentwise monotonicity survives widening.
+    big = 1 << 17
+    tiles = np.array([[0, 0], [1, 0], [65536, 0], [65537, 0],
+                      [big - 1, big - 1]], np.int64)
+    words = morton_key_words(tiles, max_tiles=big)
+    stacked = np.stack(words, axis=1)
+    assert len({tuple(r) for r in stacked}) == len(tiles)
+    order = np.lexsort(tuple(reversed(words)))
+    np.testing.assert_array_equal(order, np.arange(len(tiles)))
+
+
+def test_morton_widening_is_order_preserving_for_small_ids():
+    # prepended zero planes: in-budget ids sort identically with and
+    # without widening (key-layout stability for the common case).
+    rng = np.random.default_rng(0)
+    tiles = rng.integers(0, 1 << 10, size=(200, 3)).astype(np.int64)
+    narrow = morton_key_words(tiles)
+    wide = morton_key_words(tiles, max_tiles=1 << 20)
+    o_narrow = np.lexsort((np.arange(len(tiles)),)
+                          + tuple(reversed(narrow)))
+    o_wide = np.lexsort((np.arange(len(tiles)),) + tuple(reversed(wide)))
+    np.testing.assert_array_equal(o_narrow, o_wide)
+
+
+def test_locality_keys_max_rows_threads_to_widened_budget():
+    # factor rows past the 16-bit tile budget: locality_keys(max_rows=)
+    # must produce keys that still separate distant rows.
+    frow = 8
+    rows = np.array([[0], [frow * ((1 << 16) + 5)]], np.int64)
+    keys = locality_keys(rows, "morton", frow_tile=frow,
+                         max_rows=int(rows.max()) + 1)
+    stacked = np.stack(keys, axis=1)
+    assert not np.array_equal(stacked[0], stacked[1])
+    with pytest.raises(ValueError, match="Morton budget"):
+        locality_keys(rows, "morton", frow_tile=frow)
