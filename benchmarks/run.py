@@ -19,7 +19,7 @@ import time
 
 from . import (bench_bf16_convergence, bench_collective_traffic,
                bench_dispatch, bench_lowering, bench_memory, bench_oocore,
-               bench_preprocess, bench_rank, bench_remap_fusion,
+               bench_preprocess, bench_prof, bench_rank, bench_remap_fusion,
                bench_remap_traffic, bench_reorder, bench_resilience,
                bench_scaling,
                bench_schedule, bench_total_time, roofline)
@@ -43,6 +43,7 @@ SUITES = {
     "reorder": bench_reorder.run,                # locality-ordered streams
     "resilience": bench_resilience.run,          # fault-injection overhead
     "lowering": bench_lowering.run,              # interpret=False Mosaic status
+    "prof": bench_prof.run,                      # timed steps + roofline GB/s
 }
 
 

@@ -47,15 +47,22 @@ def load(dirname):
 COUNTED_SUITES = {"BENCH_lowering.json", "BENCH_oocore.json",
                   "BENCH_dispatch.json", "BENCH_reorder.json"}
 
+# Suites that *join* both kinds: measured wall time divided by counted
+# bytes (the repro.obs.prof roofline). Host-local like any timed number,
+# but each row carries its counted denominator, so the artifact is
+# interpretable across hosts even though it is not comparable.
+PROFILED_SUITES = {"BENCH_prof.json"}
+
 
 def bench_inventory(bench_dir="experiments/bench"):
     """Summarize the BENCH_*.json artifacts (the survivors).
 
     One line per artifact: suite name, row count, the `bench=` row kinds
     inside, and whether the suite is counted (host-independent, lives in
-    git) or timed (host-local, regenerate with `python -m
-    benchmarks.run`) — enough to see at a glance which figures have data
-    and which numbers are portable without parsing each file.
+    git), timed (host-local, regenerate with `python -m
+    benchmarks.run`), or profiled (timed ÷ counted — the roofline
+    suites) — enough to see at a glance which figures have data and
+    which numbers are portable without parsing each file.
     """
     paths = sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
     print("\n### §Benchmarks — artifact inventory "
@@ -67,8 +74,12 @@ def bench_inventory(bench_dir="experiments/bench"):
     print("|---|---|---|---|")
     for p in paths:
         name = os.path.basename(p)
-        kind = ("counted (committed)" if name in COUNTED_SUITES
-                else "timed (host-local)")
+        if name in COUNTED_SUITES:
+            kind = "counted (committed)"
+        elif name in PROFILED_SUITES:
+            kind = "profiled (timed ÷ counted, host-local)"
+        else:
+            kind = "timed (host-local)"
         try:
             with open(p) as f:
                 rows = json.load(f)

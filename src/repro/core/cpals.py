@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Callable, Sequence
 
 import jax
@@ -162,10 +163,12 @@ def cp_als(tensor, rank: int, *, iters: int = 10, seed: int = 0,
             fits = [float(x) for x in state["fits"]]
             start_it = int(state["sweep"]) + 1
     for it in range(start_it, iters):
+        t0 = time.perf_counter()
         with tracer.span("sweep", sweep=it, driver="single"):
             factors, lam, fit = _sweep_jax(idx, val, tuple(factors), lam,
                                            tuple(tensor.shape), it == 0)
-            fit = float(fit)
+            fit = float(fit)   # blocks: the sweep is fully resolved here
+        _obs.add("cpals.sweep_s", time.perf_counter() - t0, driver="single")
         _obs.add("cpals.sweeps", driver="single")
         fits.append(fit)
         if mgr is not None and (it + 1) % checkpoint_every == 0:
@@ -349,10 +352,12 @@ def _cp_als_distributed_traced(ft, rank, mesh, rt, idx, val, mask, *,
     pol = _rpolicy.get_policy()
     grams = [f.T @ f for f in factors]
     for it in range(start_it, iters):
+        t_sweep = time.perf_counter()
         with tracer.span("sweep", sweep=it, driver="distributed"):
             M = A = None
             for n in range(rt.nmodes):
                 with tracer.span("mode", mode=n):
+                    t0 = time.perf_counter()
                     with tracer.span("mttkrp", backend=backend):
                         def _mttkrp(n=n, idx=idx, val=val, mask=mask,
                                     factors=tuple(factors)):
@@ -366,6 +371,9 @@ def _cp_als_distributed_traced(ft, rank, mesh, rt, idx, val, mask, *,
                         # — reduction order follows layout, and resume
                         # exactness is part of the checkpoint contract.
                         M = jnp.asarray(np.asarray(M))
+                    _obs.add("cpals.phase_s", time.perf_counter() - t0,
+                             phase="mttkrp", mode=n)
+                    t0 = time.perf_counter()
                     with tracer.span("solve"):
                         A, level = _solve_v_guarded(grams, n, M)
                         A, norms = _normalize_columns(A, it == 0)
@@ -375,9 +383,12 @@ def _cp_als_distributed_traced(ft, rank, mesh, rt, idx, val, mask, *,
                             _obs.add("resilience.solve.guards",
                                      level=_numerics.GUARD_LEVELS[level],
                                      mode=n)
+                    _obs.add("cpals.phase_s", time.perf_counter() - t0,
+                             phase="solve", mode=n)
                     factors[n] = A
                     grams[n] = A.T @ A
                     lam = norms
+                    t0 = time.perf_counter()
                     with tracer.span("remap", transition=n):
                         def _remap(n=n, idx=idx, val=val, mask=mask):
                             return jax.block_until_ready(
@@ -385,7 +396,11 @@ def _cp_als_distributed_traced(ft, rank, mesh, rt, idx, val, mask, *,
                         idx, val, mask = (
                             _remap() if pol is None
                             else pol.run("distributed.remap", _remap))
+                    _obs.add("cpals.phase_s", time.perf_counter() - t0,
+                             phase="remap", mode=n)
             fit = float(fit_from_parts(x_norm_sq, lam, grams, M, A))
+        _obs.add("cpals.sweep_s", time.perf_counter() - t_sweep,
+                 driver="distributed")
         _obs.add("cpals.sweeps", driver="distributed")
         fits.append(fit)
         if mgr is not None and (it + 1) % checkpoint_every == 0:
@@ -471,11 +486,15 @@ def cp_als_distributed(ft: FlycooTensor, rank: int, mesh: Mesh, *,
         (rt.num_workers,)).copy()
     fits: list[float] = []
     for it in range(iters):
+        t0 = time.perf_counter()
         (idx, val, mask), factors, lam, fit = sweep(
             idx, val, mask, x_norm_sq, *factors, lam,
             jnp.asarray(it == 0))
+        fit = float(fit)   # blocks on the whole fused sweep
+        _obs.add("cpals.sweep_s", time.perf_counter() - t0,
+                 driver="distributed")
         _obs.add("cpals.sweeps", driver="distributed")
-        fits.append(float(fit))
+        fits.append(fit)
         if it > 0 and abs(fits[-1] - fits[-2]) < tol:
             break
     nat = [dist.unpermute_factor(ft, rt, n, np.asarray(f))

@@ -32,6 +32,7 @@ Everything here is static-shape and jit-safe so it can live inside
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +40,7 @@ import jax.numpy as jnp
 from . import kernel as _kernel
 from . import ref as _ref
 from ...obs import counters as _obs
+from ...obs import tracer as _tracer_mod
 from ...oocore import planner as _planner
 # Imported as the submodule path (not via the package __init__) so the
 # reorder ↔ kernels import cycle resolves: ordering.py only needs
@@ -63,7 +65,9 @@ __all__ = [
     "mttkrp_device_step",
     "pad_rank",
     "select_backend",
+    "step_traffic_bytes",
     "tile_schedule",
+    "timed_device_step",
     "VMEM_BUDGET_BYTES",
 ]
 
@@ -638,3 +642,65 @@ def mttkrp_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
         # dispatch, one attempt at the selected backend.
         return _attempt(backend, interpret)
     return pol.dispatch(_attempt, backend, interpret)
+
+
+def step_traffic_bytes(*, cap: int, nmodes: int, rank: int, rows_cap: int,
+                       gather_dtype: str = "float32") -> int:
+    """First-order counted traffic model of one device mode step.
+
+    What the step minimally moves, independent of backend: the nonzero
+    stream (values + local rows + K gathered-mode indices, 4 B each),
+    one gathered factor row per nonzero per input mode (``rpad``
+    gather-dtype elements), and the output factor write. Deliberately a
+    *model*, not a measurement — it is the denominator-side constant the
+    roofline divides a measured step time by (``ops.step.model_bytes``),
+    playing the role the oocore path's exact schedule-counted bytes play
+    for the stream backend.
+    """
+    k = nmodes - 1
+    gi = 2 if gather_dtype == "bfloat16" else 4
+    rpad = padded_rank(rank)
+    stream_b = cap * (4 + 4 + 4 * k)
+    gather_b = cap * k * rpad * gi
+    out_b = rows_cap * rpad * 4
+    return stream_b + gather_b + out_b
+
+
+def timed_device_step(idx, val, valid, factors, *, mode: int, rows_cap: int,
+                      row_offset, blk: int = 512, tile_rows: int = 128,
+                      interpret: bool | None = None,
+                      backend: str = "pallas",
+                      gather_dtype: str = "float32",
+                      ordering: str = "none"):
+    """:func:`mttkrp_device_step`, fenced and timed from the host.
+
+    The device step itself is jitted — no host clock can live inside
+    it — so wall-clock observability needs this one-call-out wrapper:
+    an ``ops.device_step`` span around the call plus
+    ``block_until_ready``, with the step's modeled traffic
+    (:func:`step_traffic_bytes`) emitted *inside* the span so the
+    roofline can join measured seconds with counted bytes. Emits
+    ``ops.step_s`` (wall seconds, labeled by backend). The backend label
+    is the *requested* backend (``auto`` stays ``auto``): resolving it
+    here would re-emit the dispatch counters the jitted step already
+    emits at trace time.
+    """
+    tracer = _tracer_mod.get_tracer()
+    cap = int(idx.shape[0])
+    nmodes = int(idx.shape[1])
+    rank = int(factors[mode].shape[-1])
+    model_b = step_traffic_bytes(cap=cap, nmodes=nmodes, rank=rank,
+                                 rows_cap=rows_cap,
+                                 gather_dtype=gather_dtype)
+    t0 = time.perf_counter()
+    with tracer.span("ops.device_step", backend=backend, mode=mode,
+                     ordering=ordering):
+        _obs.add("ops.step.model_bytes", model_b, backend=backend)
+        out = mttkrp_device_step(
+            idx, val, valid, factors, mode=mode, rows_cap=rows_cap,
+            row_offset=row_offset, blk=blk, tile_rows=tile_rows,
+            interpret=interpret, backend=backend,
+            gather_dtype=gather_dtype, ordering=ordering)
+        out = jax.block_until_ready(out)
+    _obs.add("ops.step_s", time.perf_counter() - t0, backend=backend)
+    return out

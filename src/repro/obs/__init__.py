@@ -30,7 +30,9 @@ from .tracer import (
     SpanRecord,
     Tracer,
     get_tracer,
+    sanitize_span_name,
     set_tracer,
+    unique_path,
     use_tracer,
     validate_chrome_trace,
 )
@@ -50,7 +52,9 @@ __all__ = [
     "SpanRecord",
     "Tracer",
     "get_tracer",
+    "sanitize_span_name",
     "set_tracer",
+    "unique_path",
     "use_tracer",
     "validate_chrome_trace",
 ]

@@ -80,7 +80,9 @@ def cmd_validate(args) -> int:
 def cmd_baseline(args) -> int:
     from . import baseline as _baseline
 
-    status, messages = _baseline.run_gate(update=args.update_baseline)
+    status, messages = _baseline.run_gate(
+        update=args.update_baseline,
+        path=args.path or _baseline.BASELINE_PATH)
     for m in messages:
         print(m)
     return status
@@ -104,6 +106,9 @@ def main(argv=None) -> int:
     g = p.add_mutually_exclusive_group()
     g.add_argument("--check", action="store_true", default=True)
     g.add_argument("--update-baseline", action="store_true")
+    p.add_argument("--path", default=None,
+                   help="baseline artifact path (default: the committed "
+                        "experiments/obs/BASELINE_counters.json)")
 
     args = ap.parse_args(argv)
     return {"report": cmd_report, "export": cmd_export,

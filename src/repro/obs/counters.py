@@ -57,6 +57,8 @@ __all__ = [
 # it with ``ast`` and fails CI when docs/observability.md's counter
 # table and this tuple disagree (either direction). Keep it sorted.
 NAMESPACES = (
+    "cpals.phase_s",
+    "cpals.sweep_s",
     "cpals.sweeps",
     "dispatch.backend",
     "dryrun.compile_s",
@@ -68,7 +70,10 @@ NAMESPACES = (
     "oocore.dma.index_stream_bytes",
     "oocore.dma.pipelined_bytes",
     "oocore.dma.scheduled_bytes",
+    "oocore.mode_step_s",
     "oocore.mode_steps",
+    "ops.step.model_bytes",
+    "ops.step_s",
     "planner.plans",
     "planner.vmem.plan_bytes",
     "remap.a2a.bytes",

@@ -42,15 +42,60 @@ __all__ = [
     "SpanRecord",
     "Tracer",
     "get_tracer",
+    "sanitize_span_name",
     "set_tracer",
+    "unique_path",
     "use_tracer",
     "validate_chrome_trace",
 ]
 
+# Characters that break downstream span-name consumers: semicolons are
+# the collapsed-stack (flamegraph) separator, braces collide with the
+# counter-key label syntax, and control characters corrupt the rendered
+# tree / confuse trace viewers even when JSON-escaped.
+_NAME_BAD = {ord(c): "_" for c in ";{}"}
+_NAME_BAD.update({c: "_" for c in range(0x20)})
+_NAME_BAD[0x7F] = "_"
+
+
+def sanitize_span_name(name) -> str:
+    """A span name safe for Chrome-trace, flamegraph, and table exports.
+
+    Non-strings are stringified; semicolons/braces/control characters
+    become ``_``. Empty names render as ``"?"`` so a blank never
+    produces an unlabeled frame.
+    """
+    out = str(name).translate(_NAME_BAD)
+    return out if out else "?"
+
+
+def unique_path(path: str) -> str:
+    """``path`` if free, else the first ``stem-N.ext`` that is.
+
+    Repeated exports must never silently overwrite an earlier trace —
+    callers use the *returned* path as the artifact location.
+    """
+    if not os.path.exists(path):
+        return path
+    stem, ext = os.path.splitext(path)
+    n = 2
+    while os.path.exists(f"{stem}-{n}{ext}"):
+        n += 1
+    return f"{stem}-{n}{ext}"
+
 
 @dataclasses.dataclass(frozen=True)
 class SpanRecord:
-    """One closed span. ``sid``/``parent`` link the forest (-1 = root)."""
+    """One closed span. ``sid``/``parent`` link the forest (-1 = root).
+
+    ``counters`` is the *inclusive* counter delta over the span's
+    lifetime (children included); ``self_counters`` excludes every
+    direct child's inclusive delta — the share this span's own body
+    emitted. Aggregating ``self_counters`` by name is double-count-free
+    even when spans nest under the same name (``oocore.mode_step``
+    inside a retried ``oocore.mode_step``, recursive phases, …), which
+    is what the profiler's roofline join relies on.
+    """
 
     sid: int
     parent: int
@@ -60,6 +105,7 @@ class SpanRecord:
     t0: float
     t1: float
     counters: dict
+    self_counters: dict = dataclasses.field(default_factory=dict)
 
     @property
     def duration_s(self) -> float:
@@ -67,11 +113,13 @@ class SpanRecord:
 
 
 class _Frame:
-    __slots__ = ("sid", "parent", "depth", "name", "args", "t0", "snap")
+    __slots__ = ("sid", "parent", "depth", "name", "args", "t0", "snap",
+                 "child_delta")
 
     def __init__(self, sid, parent, depth, name, args, t0, snap):
         self.sid, self.parent, self.depth = sid, parent, depth
         self.name, self.args, self.t0, self.snap = name, args, t0, snap
+        self.child_delta: dict = {}
 
 
 class _SpanCM:
@@ -126,13 +174,28 @@ class Tracer:
         t1 = self._clock()
         f = self._stack.pop()
         delta: dict = {}
+        self_delta: dict = {}
         if f.snap is not None:
             cur = _counters.get_registry().snapshot()
             delta = {k: v - f.snap.get(k, 0)
                      for k, v in cur.items() if v != f.snap.get(k, 0)}
+            # Self-delta: the inclusive delta minus what this frame's
+            # direct children already claimed. Same-name nesting is the
+            # case that used to double-count — each child's inclusive
+            # delta was folded into the parent's only record — so the
+            # children's deltas are accumulated per frame on their exit
+            # and subtracted here, never re-derived from names.
+            self_delta = {k: v - f.child_delta.get(k, 0)
+                          for k, v in delta.items()
+                          if v != f.child_delta.get(k, 0)}
+            if self._stack:
+                parent_acc = self._stack[-1].child_delta
+                for k, v in delta.items():
+                    parent_acc[k] = parent_acc.get(k, 0) + v
         self.records.append(SpanRecord(
             sid=f.sid, parent=f.parent, depth=f.depth, name=f.name,
-            args=f.args, t0=f.t0, t1=t1, counters=delta))
+            args=f.args, t0=f.t0, t1=t1, counters=delta,
+            self_counters=self_delta))
 
     @property
     def open_spans(self) -> int:
@@ -167,8 +230,10 @@ class Tracer:
             args = {str(k): v for k, v in r.args.items()}
             if r.counters:
                 args["counters"] = dict(r.counters)
+            if r.self_counters and r.self_counters != r.counters:
+                args["self_counters"] = dict(r.self_counters)
             events.append({
-                "name": r.name,
+                "name": sanitize_span_name(r.name),
                 "cat": "repro",
                 "ph": "X",
                 "ts": (r.t0 - base) * 1e6,
@@ -183,8 +248,17 @@ class Tracer:
             "otherData": dict(meta or {}, exporter="repro.obs"),
         }
 
-    def write_chrome_trace(self, path: str, *, meta: dict | None = None
-                           ) -> str:
+    def write_chrome_trace(self, path: str, *, meta: dict | None = None,
+                           overwrite: bool = False) -> str:
+        """Write the trace JSON; returns the path actually written.
+
+        By default an existing file is never clobbered — the export goes
+        to the first free ``stem-N.json`` variant instead (repeated
+        exports used to silently overwrite). ``overwrite=True`` restores
+        the old behavior for callers that manage their own paths.
+        """
+        if not overwrite:
+            path = unique_path(path)
         with open(path, "w") as f:
             json.dump(self.chrome_trace(meta=meta), f, indent=1, default=str)
         return path

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time as _time
 
 import jax.numpy as jnp
 import numpy as np
@@ -279,34 +280,11 @@ def mttkrp_out_of_core(
     chunks = chunk_boundaries(tile_of_block, max_blocks)
     cwindows = _planner.chunk_window_tiles(dcounts, chunks, windows)
 
-    tracer = _tracer_mod.get_tracer()
-    out = jnp.zeros((rows_cap, rpad), jnp.float32)
-    with tracer.span("oocore.mode_step", mode=mode, chunks=len(chunks)):
-        for ci, (start, stop) in enumerate(chunks):
-            sl = slice(start * blk, stop * blk)
-            cw = cwindows[ci]
-            with tracer.span("oocore.chunk", chunk=ci,
-                             blocks=stop - start):
-                def _launch(out=out, sl=sl, start=start, stop=stop, cw=cw):
-                    # Registered failure boundary (repro.resilience):
-                    # one chunk = one bounded DMA window + kernel
-                    # launch — the unit a transient blip costs, and
-                    # the unit the retry policy replays.
-                    _faults.fault_site("oocore.chunk")
-                    return _kernel.fused_mttkrp_nmode_gather_stream(
-                        v_al[sl], idx_al[sl], fmats, r_al[sl],
-                        tile_of_block[start:stop],
-                        tuple(s[start:stop, :cw[i]]
-                              for i, s in enumerate(scheds)),
-                        rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
-                        interpret=interpret, out_init=out)
-
-                pol = _resilience.get_policy()
-                out = (_launch() if pol is None
-                       else pol.run("oocore.chunk", _launch))
-                if tracer.enabled:
-                    out = out.block_until_ready()
-
+    # Counted traffic is fully determined by the schedules — build the
+    # stats *before* launching so they can be recorded inside the
+    # mode_step span below: the byte deltas then land in that span's
+    # self_counters, which is the join the achieved-bandwidth roofline
+    # (repro.obs.prof.roofline) reads. Registry totals are unchanged.
     slab_cols = min(rpad, _kernel.RANK_SLAB)
     scheduled_b, distinct_b, pipelined_b = _schedule_fetch_stats(
         scheds, chunks, cwindows, frow, slab_cols, num_slabs, gi,
@@ -334,7 +312,40 @@ def mttkrp_out_of_core(
         presort_scheduled_tile_bytes=presort_scheduled_b,
         presort_distinct_tile_bytes=presort_distinct_b,
     )
-    # The counted struct also lands in the shared obs registry — the
-    # `oocore.*` namespace the span tracer and CI baseline read.
-    _obs.record_stream_stats(stats)
+
+    tracer = _tracer_mod.get_tracer()
+    out = jnp.zeros((rows_cap, rpad), jnp.float32)
+    t_step = _time.perf_counter()
+    with tracer.span("oocore.mode_step", mode=mode, chunks=len(chunks),
+                     backend=_planner.STREAM_BACKEND, rung="stream",
+                     ordering=ordering):
+        # Emitted inside the span so the oocore.dma.* / reorder.dma.*
+        # deltas attach to it (the tracer diffs the registry per span).
+        _obs.record_stream_stats(stats)
+        for ci, (start, stop) in enumerate(chunks):
+            sl = slice(start * blk, stop * blk)
+            cw = cwindows[ci]
+            with tracer.span("oocore.chunk", chunk=ci,
+                             blocks=stop - start):
+                def _launch(out=out, sl=sl, start=start, stop=stop, cw=cw):
+                    # Registered failure boundary (repro.resilience):
+                    # one chunk = one bounded DMA window + kernel
+                    # launch — the unit a transient blip costs, and
+                    # the unit the retry policy replays.
+                    _faults.fault_site("oocore.chunk")
+                    return _kernel.fused_mttkrp_nmode_gather_stream(
+                        v_al[sl], idx_al[sl], fmats, r_al[sl],
+                        tile_of_block[start:stop],
+                        tuple(s[start:stop, :cw[i]]
+                              for i, s in enumerate(scheds)),
+                        rows_cap=rows_cap, blk=blk, tile_rows=tile_rows,
+                        interpret=interpret, out_init=out)
+
+                pol = _resilience.get_policy()
+                out = (_launch() if pol is None
+                       else pol.run("oocore.chunk", _launch))
+                if tracer.enabled:
+                    out = out.block_until_ready()
+    _obs.add("oocore.mode_step_s", _time.perf_counter() - t_step,
+             backend=_planner.STREAM_BACKEND, ordering=ordering)
     return out[:, :rank], stats

@@ -28,7 +28,6 @@ table/selection logic stays exactly the code path production uses.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Iterable, Sequence
 
 import jax
@@ -183,14 +182,13 @@ def _segsum_step(idx, val, valid, factors, rows_cap: int):
 
 
 def _time(fn: Callable, *, warmup: int, iters: int) -> float:
-    for _ in range(warmup):
-        jax.block_until_ready(fn())
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    # Shared steady-state idiom (repro.obs.prof.harness): fenced warmup
+    # + repeats, robust median with outlier rejection at iters >= 4 —
+    # calibration runs long enough to catch a GC pause now reject it
+    # instead of baking it into the table's argmins.
+    from ..obs.prof import harness as _harness
+
+    return _harness.measure_steady(fn, warmup=warmup, repeats=iters).median_s
 
 
 def _real_measure(*, seed: int, warmup: int, iters: int) -> Callable:

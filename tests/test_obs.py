@@ -452,3 +452,74 @@ def test_run_gate_reports_failure_on_perturbed_baseline(tmp_path,
     status, msgs = obaseline.run_gate(path=path)
     assert status == 1
     assert any("planner.plans" in m for m in msgs)
+
+
+# ---------------------------------------------------------------------------
+# `python -m repro.obs` CLI paths (report | export | validate | baseline)
+# ---------------------------------------------------------------------------
+
+from repro.obs import __main__ as obs_main  # noqa: E402
+
+
+def _cli_collect(tracer=None):
+    """Tiny stand-in for the instrumented workload: real spans, fixed
+    counters, no jax run."""
+    tracer = tracer if tracer is not None else otr.Tracer()
+    with tracer.span("sweep", sweep=0):
+        with tracer.span("mode", mode=0):
+            with tracer.span("mttkrp"):
+                pass
+    return {"counters": {"planner.plans": 4, "oocore.chunks": 12}}
+
+
+def test_cli_report_prints_tree_and_counters(monkeypatch, capsys):
+    monkeypatch.setattr(obaseline, "collect", _cli_collect)
+    assert obs_main.main(["report"]) == 0
+    out = capsys.readouterr().out
+    for needle in ("sweep", "mode", "mttkrp", "counters:",
+                   "planner.plans = 4", "oocore.chunks = 12"):
+        assert needle in out, needle
+
+
+def test_cli_export_then_validate_round_trip(tmp_path, monkeypatch, capsys):
+    monkeypatch.setattr(obaseline, "collect", _cli_collect)
+    out_path = str(tmp_path / "trace.json")
+    assert obs_main.main(["export", "--out", out_path]) == 0
+    wrote = capsys.readouterr().out
+    assert "wrote" in wrote and "3 spans" in wrote
+    # export uniquifies rather than clobbering: the written path is the
+    # one printed, not necessarily the one requested
+    written = wrote.split()[1].rstrip(":")
+    assert obs_main.main(
+        ["validate", written, "--expect", "sweep,mode,mttkrp"]) == 0
+    assert "trace valid" in capsys.readouterr().out
+
+
+def test_cli_validate_rejects_corrupt_and_missing_names(tmp_path,
+                                                        monkeypatch,
+                                                        capsys):
+    monkeypatch.setattr(obaseline, "collect", _cli_collect)
+    out_path = str(tmp_path / "trace.json")
+    assert obs_main.main(["export", "--out", out_path]) == 0
+    written = capsys.readouterr().out.split()[1].rstrip(":")
+    # a span name the trace doesn't contain
+    assert obs_main.main(
+        ["validate", written, "--expect", "oocore.mode_step"]) == 1
+    assert "FAIL" in capsys.readouterr().out
+    # structurally corrupt JSON
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"traceEvents": [{"ph": "X"}]}))
+    assert obs_main.main(["validate", str(bad)]) == 1
+
+
+def test_cli_baseline_update_check_perturb(tmp_path, monkeypatch, capsys):
+    monkeypatch.setattr(obaseline, "collect", _cli_collect)
+    path = str(tmp_path / "BASELINE_counters.json")
+    assert obs_main.main(["baseline", "--update-baseline",
+                          "--path", path]) == 0
+    assert obs_main.main(["baseline", "--path", path]) == 0
+    perturbed = {"counters": {"planner.plans": 5, "oocore.chunks": 12}}
+    monkeypatch.setattr(obaseline, "collect",
+                        lambda tracer=None: perturbed)
+    assert obs_main.main(["baseline", "--path", path]) == 1
+    assert "planner.plans" in capsys.readouterr().out
